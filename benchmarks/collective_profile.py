@@ -1,0 +1,70 @@
+"""Hillclimb profiler: top collective contributors for one cell.
+
+Lowers an unrolled reduced-depth probe at production shapes and aggregates
+collective ops by (op-type, shape) — the 'profile' that drives the §Perf
+hypothesis loop (no wall-clock exists on CPU; the lowered IR is the profile).
+
+    PYTHONPATH=src python -m benchmarks.collective_profile \
+        --arch mixtral-8x22b --shape train_4k [--layers 2]
+"""
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import collections   # noqa: E402
+import dataclasses   # noqa: E402
+import re            # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.dryrun import _lower_compile  # noqa: E402
+from repro.launch.hlo_analysis import _OP_RE, _SHAPE_RE, shape_bytes  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.parallel.sharding import make_axis_rules, use_rules  # noqa: E402
+
+
+def profile(arch: str, shape_name: str, layers: int = 2, top: int = 15):
+    cfg = get_config(arch)
+    kw = {"num_layers": layers}
+    if cfg.family == "encdec":
+        kw["encoder_layers"] = layers
+    cfg = dataclasses.replace(cfg, **kw)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh()
+    rules = make_axis_rules(mesh)
+    with use_rules(rules):
+        _, compiled, _ = _lower_compile(cfg, shape, mesh, rules, unroll=True)
+    hlo = compiled.as_text()
+    agg = collections.Counter()
+    counts = collections.Counter()
+    for line in hlo.splitlines():
+        m = _OP_RE.search(line)
+        if not m or m.group("suffix") == "-done":
+            continue
+        lhs = m.group("lhs")
+        nbytes = sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        if m.group("suffix") == "-start" and lhs.strip().startswith("("):
+            nbytes /= 2
+        key = (m.group("op"), lhs.strip()[:70])
+        agg[key] += nbytes
+        counts[key] += 1
+    print(f"# {arch} {shape_name} — {layers}-layer unrolled probe, "
+          f"top {top} collectives by bytes:")
+    total = sum(agg.values())
+    for (op, sh), b in agg.most_common(top):
+        print(f"{b/1e9:9.3f} GB  x{counts[(op, sh)]:<4} {op:<20} {sh}")
+    print(f"{total/1e9:9.3f} GB  TOTAL (probe; extrapolate x"
+          f"{(get_config(arch).num_layers - layers) / layers + 1:.0f} "
+          "for per-layer ops)")
+    return agg
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--top", type=int, default=15)
+    a = ap.parse_args()
+    profile(a.arch, a.shape, a.layers, a.top)

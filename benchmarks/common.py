@@ -1,0 +1,56 @@
+"""Shared benchmark fixtures: the paper's measured tables, the calibrated
+simulated testbed, and helpers for timing + CSV emission."""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs.vgg import VGG5, VGG8, VGGConfig
+from repro.core import costmodel as cm
+
+# --- the paper's measured numbers + calibrated testbed ----------------------
+from repro.core.testbed import (  # noqa: F401
+    TABLE_V,
+    TABLE_VI,
+    TABLE_VII_TIMES,
+    TABLE_VIII,
+    paper_testbed,
+    server_calibration,
+)
+
+# optimal per-group action ranges, §V-B (G3 = low-bandwidth group: at
+# 10 Mbps the optimum for VGG-5 is *native* — Table V last column)
+PAPER_OPTIMAL_ACTIONS = {"G1": (0.96, 1.0), "G2": (0.0, 0.38),
+                         "G3": (0.0, 0.38)}
+LOW_BW_OPTIMAL = (0.96, 1.0)
+PAPER_BOUNDARIES = (0.38, 0.79, 0.96)
+
+
+def calibrated_workload(cfg: VGGConfig = VGG5, batch: int = 100
+                        ) -> cm.Workload:
+    return cm.vgg_workload(cfg, batch_size=batch)
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows (benchmarks/run.py format)."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")
+
+
+def timed(fn, *args, repeats: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.time() - t0) / repeats
+    return out, dt * 1e6   # us

@@ -1,0 +1,298 @@
+"""Paper-validation benchmarks — one per FedAdapt table/figure.
+
+Each function returns (us_per_call, derived-string); ``derived`` carries the
+claim check (paper number vs ours).  The calibration fits only (C_dev, C_srv,
+overhead) on the 75 Mbps column; all other bandwidths/devices/predictions are
+out-of-sample.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import numpy as np
+
+from benchmarks import common as C
+from repro.configs.vgg import VGG5, VGG8
+from repro.core import costmodel as cm
+from repro.core import offload
+from repro.core.agent import PPOAgent, PPOConfig
+from repro.core.clustering import cluster_devices
+from repro.core.controller import (
+    FedAdaptController,
+    run_fl_with_controller,
+    train_rl_agent,
+)
+from repro.core.env import SimulatedCluster
+
+_cache: Dict[str, object] = {}
+
+
+# =============================================================================
+# Tables V / VI: layer offloading across bandwidths (RQ1)
+# =============================================================================
+def _table_bench(cfg, table):
+    w = C.calibrated_workload(cfg)
+    t0 = time.time()
+    c_dev, c_srv, ovh = cm.calibrate_linear(w, cfg.ops, table[75e6], 75e6)
+    agree, errs = 0, []
+    for bw, meas in table.items():
+        pred = [cm.iteration_time(w, op, c_dev, c_srv, bw, ovh)
+                for op in cfg.ops]
+        agree += int(np.argmin(pred) == np.argmin(meas))
+        errs.append(np.mean(np.abs(np.asarray(pred) - meas)
+                            / np.asarray(meas)))
+    us = (time.time() - t0) * 1e6
+    return us, (f"best-OP agreement {agree}/4 bandwidths; "
+                f"mean relerr {np.mean(errs):.3f}")
+
+
+def bench_table5():
+    return _table_bench(VGG5, C.TABLE_V)
+
+
+def bench_table6():
+    return _table_bench(VGG8, C.TABLE_VI)
+
+
+# =============================================================================
+# Table VII / IX: clustering
+# =============================================================================
+def bench_table7():
+    times = list(C.TABLE_VII_TIMES.values())
+    t0 = time.time()
+    g = cluster_devices(times, [75e6] * 5, num_groups=3)
+    us = (time.time() - t0) * 1e6
+    # paper: jetson alone (fastest), 3 mid devices together, straggler alone
+    want = [0, 1, 1, 1, 2]
+    ok = list(g.assignments) == want
+    return us, f"groups={list(g.assignments)} paper={want} match={ok}"
+
+
+def bench_table9():
+    times = list(C.TABLE_VII_TIMES.values())
+    bw = [75e6, 75e6, 75e6, 10e6, 75e6]   # pi3_2 throttled (paper §V-C)
+    t0 = time.time()
+    g = cluster_devices(times, bw, num_groups=2, low_bw_threshold=25e6)
+    us = (time.time() - t0) * 1e6
+    ok = (g.low_bw_group is not None
+          and list(g.members(g.low_bw_group)) == [3])
+    return us, (f"groups={list(g.assignments)} low_bw_group={g.low_bw_group} "
+                f"pi3_2-isolated={ok}")
+
+
+# =============================================================================
+# Table VIII: per-device OP sweep ground truth
+# =============================================================================
+def bench_table8():
+    w, devices, c_srv, ovh = C.paper_testbed(VGG5)
+    t0 = time.time()
+    agree = 0
+    details = []
+    for dev, (name, meas) in zip(devices[:1] + devices[1:2] + devices[2:3]
+                                 + devices[4:5],
+                                 C.TABLE_VIII.items()):
+        pred = [cm.iteration_time(w, op, dev.flops_per_s, c_srv, 75e6, ovh)
+                for op in VGG5.ops]
+        agree += int(np.argmin(pred) == np.argmin(meas))
+        details.append(f"{name}:OP{int(np.argmin(pred))+1}")
+    us = (time.time() - t0) * 1e6
+    return us, (f"best-OP agreement {agree}/4 devices "
+                f"({' '.join(details)}; paper: jetson OP4, rest OP1)")
+
+
+# =============================================================================
+# Fig 5 / 7: RL action convergence (RQ2/RQ3)
+# =============================================================================
+def _train_agent(low_bw: bool, factored: bool, seed: int = 0,
+                 rounds: int = 500):
+    w, devices, c_srv, ovh = C.paper_testbed(VGG5)
+    if low_bw:
+        devices = [cm.DeviceProfile(d.name, d.flops_per_s,
+                                    10e6 if d.name == "pi3_2" else 75e6)
+                   for d in devices]
+    sim = SimulatedCluster(w, devices, c_srv, VGG5.ops, iterations=5,
+                           jitter=0.03, seed=1, overhead_s=ovh)
+    agent = PPOAgent(PPOConfig(num_groups=3, factored=factored), seed=seed)
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=3,
+                             low_bw_threshold=25e6 if low_bw else None,
+                             agent=agent, seed=seed)
+    hist = train_rl_agent(sim, ctl, rounds=rounds)
+    return ctl, hist
+
+
+def _rounds_to_optimal(actions: np.ndarray, col: int, lo: float, hi: float,
+                       window: int = 20) -> int:
+    """First round whose trailing-`window` mean enters [lo, hi] for good."""
+    means = np.asarray([actions[max(0, i - window):i + 1, col].mean()
+                        for i in range(len(actions))])
+    inside = (means >= lo) & (means <= hi)
+    for i in range(len(inside)):
+        if inside[i:].all():
+            return i
+    return -1
+
+
+def bench_fig5():
+    t0 = time.time()
+    ctl, hist = _train_agent(low_bw=False, factored=False)
+    _cache["agent_fig5"] = ctl
+    us = (time.time() - t0) * 1e6
+    a = hist["actions"]
+    r1 = _rounds_to_optimal(a, 0, *C.PAPER_OPTIMAL_ACTIONS["G1"])
+    r2 = _rounds_to_optimal(a, 1, *C.PAPER_OPTIMAL_ACTIONS["G2"])
+    r3 = _rounds_to_optimal(a, 2, *C.PAPER_OPTIMAL_ACTIONS["G3"])
+    return us, (f"rounds-to-optimal G1={r1} G2={r2} G3={r3} "
+                f"(paper: ~80/~30/~40; -1 = not converged w/ scalar Eq.5 "
+                f"reward)")
+
+
+def bench_fig5_factored():
+    t0 = time.time()
+    ctl, hist = _train_agent(low_bw=False, factored=True)
+    _cache["agent_factored"] = ctl
+    us = (time.time() - t0) * 1e6
+    a = hist["actions"]
+    r1 = _rounds_to_optimal(a, 0, *C.PAPER_OPTIMAL_ACTIONS["G1"])
+    r2 = _rounds_to_optimal(a, 1, *C.PAPER_OPTIMAL_ACTIONS["G2"])
+    r3 = _rounds_to_optimal(a, 2, *C.PAPER_OPTIMAL_ACTIONS["G3"])
+    return us, (f"rounds-to-optimal G1={r1} G2={r2} G3={r3} "
+                f"(beyond-paper factored credit; all three converge)")
+
+
+def bench_fig7():
+    t0 = time.time()
+    ctl, hist = _train_agent(low_bw=True, factored=True)
+    _cache["agent_fig7"] = ctl
+    us = (time.time() - t0) * 1e6
+    a = hist["actions"]
+    # at 10 Mbps the optimal for the low-bw group is *native* (Table V)
+    r3 = _rounds_to_optimal(a, 2, *C.LOW_BW_OPTIMAL)
+    return us, (f"low-bw group rounds-to-native-optimal={r3} "
+                f"(paper: 240 rounds w/ scalar reward)")
+
+
+# =============================================================================
+# Fig 6 / 10: per-device + total round time, trained agent deployed
+# =============================================================================
+def _deploy(cfg, controller_src: str):
+    w, devices, c_srv, ovh = C.paper_testbed(cfg)
+    sim = SimulatedCluster(w, devices, c_srv, cfg.ops, iterations=100,
+                           jitter=0.0, seed=7, overhead_s=ovh)
+    ctl_trained = _cache.get(controller_src) or _train_agent(
+        low_bw=False, factored=True)[0]
+    # reuse the trained actor; fresh controller bound to this workload
+    ctl = FedAdaptController(w, cfg.ops, num_groups=3, low_bw_threshold=None,
+                             agent=ctl_trained.agent)
+    hist = run_fl_with_controller(sim, ctl, rounds=10)
+    fed_times = hist["times"][-1]
+    fl_times = sim.round_times(sim.native_ops(), 0)
+    return fed_times, fl_times
+
+
+def bench_fig6():
+    t0 = time.time()
+    fed, fl = _deploy(VGG5, "agent_factored")
+    us = (time.time() - t0) * 1e6
+    straggler = 1 - fed[-1] / fl[-1]
+    total = 1 - fed.max() / fl.max()
+    return us, (f"VGG-5 straggler -{straggler:.0%} (paper -50%), "
+                f"round time -{total:.0%} (paper -40%)")
+
+
+def bench_fig10():
+    t0 = time.time()
+    fed, fl = _deploy(VGG8, "agent_factored")   # agent trained on VGG-5!
+    us = (time.time() - t0) * 1e6
+    straggler = 1 - fed[-1] / fl[-1]
+    total = 1 - fed.max() / fl.max()
+    return us, (f"VGG-8 w/ VGG-5-trained agent: straggler -{straggler:.0%} "
+                f"(paper -57%), round -{total:.0%} (paper -57%)")
+
+
+# =============================================================================
+# Fig 8 / 11: 100 rounds with the §V-D bandwidth schedule
+# =============================================================================
+def _schedule_run(cfg):
+    from repro.fl.comm import paper_schedule
+    w, devices, c_srv, ovh = C.paper_testbed(cfg)
+    sched = paper_schedule()
+    sim = SimulatedCluster(
+        w, devices, c_srv, cfg.ops, iterations=100, jitter=0.0, seed=3,
+        overhead_s=ovh, bandwidth_fn=lambda r, d: sched(r, d))
+    ctl_trained = _cache.get("agent_fig7") or _train_agent(
+        low_bw=True, factored=True)[0]
+    ctl = FedAdaptController(w, cfg.ops, num_groups=3, low_bw_threshold=25e6,
+                             agent=ctl_trained.agent)
+    hist = run_fl_with_controller(sim, ctl, rounds=100)
+    fed_total = hist["round_time"].sum()
+    fl_total = 0.0
+    for r in range(1, 101):
+        bw = sim.bandwidths(r)
+        fl_times = [cm.iteration_time(w, w.num_layers, d.flops_per_s, c_srv,
+                                      bw[i], ovh) * 100
+                    for i, d in enumerate(devices)]
+        fl_total += max(fl_times)
+    return fed_total, fl_total
+
+
+def bench_fig8():
+    t0 = time.time()
+    fed, fl = _schedule_run(VGG5)
+    us = (time.time() - t0) * 1e6
+    return us, (f"VGG-5 100-round total w/ bandwidth schedule: "
+                f"-{1 - fed/fl:.0%} vs classic FL (paper ~-30%)")
+
+
+def bench_fig11():
+    t0 = time.time()
+    fed, fl = _schedule_run(VGG8)
+    us = (time.time() - t0) * 1e6
+    return us, (f"VGG-8 (VGG-5 agent reused): -{1 - fed/fl:.0%} vs classic "
+                f"FL (paper ~-40%)")
+
+
+# =============================================================================
+# Fig 9: accuracy parity (FedAdapt == classic FL)
+# =============================================================================
+def bench_fig9():
+    from repro.data.synthetic import make_cifar_like, split_clients
+    from repro.fl.loop import FLConfig, run_federated
+    t0 = time.time()
+    data = make_cifar_like(1000, seed=0)
+    test = make_cifar_like(300, seed=99)
+    clients = split_clients(data, 5)
+    h_fl = run_federated(VGG5, clients, test, FLConfig(
+        rounds=6, local_iters=4, batch_size=40, mode="fl", augment=False))
+    h_fa = run_federated(VGG5, clients, test, FLConfig(
+        rounds=6, local_iters=4, batch_size=40, mode="sfl", static_op=2,
+        augment=False))
+    us = (time.time() - t0) * 1e6
+    gap = abs(h_fl["accuracy"][-1] - h_fa["accuracy"][-1])
+    return us, (f"final acc FL={h_fl['accuracy'][-1]:.3f} "
+                f"split={h_fa['accuracy'][-1]:.3f} gap={gap:.4f} "
+                f"(paper: same accuracy/convergence)")
+
+
+# =============================================================================
+# controller overhead (paper §V-D: ~1.6 s = 0.5% of a round)
+# =============================================================================
+def bench_overhead():
+    w, devices, c_srv, ovh = C.paper_testbed(VGG5)
+    ctl = _cache.get("agent_factored")
+    if ctl is None:
+        ctl, _ = _train_agent(low_bw=False, factored=True, rounds=50)
+    ctl2 = FedAdaptController(w, VGG5.ops, num_groups=3,
+                              low_bw_threshold=None, agent=ctl.agent)
+    ctl2.begin([0.17, 4.36, 4.47, 4.47, 5.15])
+    times = np.array([0.2, 2.4, 3.0, 3.0, 2.6])
+    bw = np.full(5, 75e6)
+    ctl2.plan(times, bw, explore=False)   # warmup (jit)
+    t0 = time.time()
+    n = 50
+    for _ in range(n):
+        ctl2.plan(times, bw, explore=False)
+    us = (time.time() - t0) / n * 1e6
+    frac = (us / 1e6) / (4.36 * 100)
+    return us, (f"controller plan() = {us/1e3:.2f} ms/round = "
+                f"{frac:.2e} of a round (paper: 0.5%)")

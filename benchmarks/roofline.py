@@ -1,0 +1,146 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) on the single-pod 16x16 mesh:
+
+    compute term    = HLO_FLOPs            / (chips x 197 TFLOP/s)
+    memory term     = HLO_bytes_accessed   / (chips x 819 GB/s)
+    collective term = collective_bytes     / (chips x 50 GB/s ICI)
+
+HLO totals come from the dry-run's extrapolated-unroll accounting (XLA's
+cost_analysis counts loop bodies once; see launch/dryrun.py).  cost_analysis
+on the SPMD module reports *per-device* numbers; the formulas above expect
+globals, so per-device x chips is used — the chips cancel:
+    term = per_device_value / peak_per_chip.
+
+Also reports MODEL_FLOPS = 6·N_active·D (train) or 2·N_active·D (serve) and
+the usefulness ratio MODEL_FLOPS / HLO_FLOPs (catches remat/redundancy).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+V5E_PEAK_FLOPS = 197e12
+V5E_HBM_BPS = 819e9
+V5E_ICI_BPS = 50e9
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def load_cells(art_dir: str = ART_DIR, mesh: str = "16x16",
+               variant: Optional[str] = None) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            cell = json.load(f)
+        if cell.get("mesh") != mesh:
+            continue
+        if variant is not None and cell.get("variant") != variant:
+            continue
+        cells.append(cell)
+    return cells
+
+
+def roofline_terms(cell: Dict) -> Optional[Dict]:
+    if cell.get("status") != "ok":
+        return None
+    unrolled = cell.get("unrolled", {})
+    if unrolled.get("status") != "ok":
+        return None
+    cost = unrolled["cost"]
+    chips = cell["chips"]
+    # cost_analysis is per-device on the SPMD module; collective bytes are
+    # parsed from the same per-device program.
+    flops_dev = cost.get("flops", 0.0)
+    bytes_dev = cost.get("bytes_accessed", 0.0)
+    coll_dev = unrolled["collectives_total"]["bytes"]
+    t_compute = flops_dev / V5E_PEAK_FLOPS
+    t_memory_raw = bytes_dev / V5E_HBM_BPS
+    t_coll = coll_dev / V5E_ICI_BPS
+
+    # flash-adjusted analytic memory term (see costmodel.py docstring): the
+    # raw term counts materialized attention scores / unfused elementwise
+    # chains that the Pallas kernels keep in VMEM.
+    from repro.configs import SHAPES, get_config
+    from repro.core.costmodel import analytic_step_memory_bytes
+    from repro.models.transformer import cache_len as tf_cache_len
+    cfg = get_config(cell["arch"])
+    shape = SHAPES[cell["shape"]]
+    dp = 16
+    tp = 16
+    cl = None
+    if shape.kind == "decode" and cfg.family in ("dense", "moe", "vlm"):
+        cl = tf_cache_len(cfg, shape.seq_len)
+    t_memory = analytic_step_memory_bytes(
+        cfg, shape.kind, shape.global_batch, shape.seq_len, dp, tp,
+        cache_len=cl) / V5E_HBM_BPS
+
+    dominant = max(
+        [("compute", t_compute), ("memory", t_memory),
+         ("collective", t_coll)], key=lambda kv: kv[1])[0]
+    model_flops = cell.get("model_flops", 0.0)
+    hlo_flops_global = flops_dev * chips
+    step_time = max(t_compute, t_memory, t_coll)
+    mfu = (model_flops / (chips * V5E_PEAK_FLOPS)) / step_time \
+        if step_time > 0 else 0.0
+    return {
+        "arch": cell["arch"], "shape": cell["shape"],
+        "variant": cell.get("variant", "baseline"),
+        "kind": cell["kind"], "chips": chips,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_memory_raw_s": t_memory_raw,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops": model_flops,
+        "hlo_flops_global": hlo_flops_global,
+        "useful_ratio": model_flops / hlo_flops_global
+        if hlo_flops_global else 0.0,
+        "roofline_fraction_mfu": mfu,
+        "coll_breakdown": {
+            k: v["bytes"] for k, v in unrolled["collectives"].items()
+            if k != "total" and v["bytes"] > 0},
+        "peak_memory_gb": cell.get("memory", {}).get(
+            "peak_memory_in_bytes", 0) / 1e9,
+        "temp_memory_gb": cell.get("memory", {}).get(
+            "temp_size_in_bytes", 0) / 1e9,
+    }
+
+
+def table(variant: Optional[str] = "baseline") -> List[Dict]:
+    rows = []
+    for cell in load_cells(variant=variant):
+        r = roofline_terms(cell)
+        if r is not None:
+            rows.append(r)
+    return rows
+
+
+def format_markdown(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | mem-raw s | collective s "
+           "| dominant | useful | MFU-bound |\n"
+           "|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+            f"| {r['t_memory_s']:.3e} | {r['t_memory_raw_s']:.3e} "
+            f"| {r['t_collective_s']:.3e} "
+            f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+            f"| {r['roofline_fraction_mfu']:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = table()
+    print(format_markdown(rows))
+    if rows:
+        by_dom: Dict[str, int] = {}
+        for r in rows:
+            by_dom[r["dominant"]] = by_dom.get(r["dominant"], 0) + 1
+        print(f"\n{len(rows)} cells; dominant-term counts: {by_dom}")
+
+
+if __name__ == "__main__":
+    main()

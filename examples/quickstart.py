@@ -1,0 +1,48 @@
+"""Quickstart: FedAdapt end to end in ~2 minutes on CPU.
+
+Reconstructs the paper's 5-device testbed (speeds calibrated to Table VIII),
+trains the PPO agent offline on truncated rounds (§IV), deploys it, and
+prints the per-device round times vs classic FL — the paper's Fig. 6.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs.vgg import VGG5
+from repro.core import costmodel as cm
+from repro.core.agent import PPOAgent, PPOConfig
+from repro.core.controller import (
+    FedAdaptController,
+    run_fl_with_controller,
+    train_rl_agent,
+)
+from repro.core.env import SimulatedCluster
+
+# --- 1. the testbed: one fast device, three mid Pis, one straggler ----------
+from repro.core.testbed import paper_testbed
+w, devices, server, overhead = paper_testbed(VGG5)
+
+# --- 2. train the RL agent offline on truncated rounds ----------------------
+sim = SimulatedCluster(w, devices, server, VGG5.ops, iterations=5,
+                       jitter=0.03, seed=1, overhead_s=overhead)
+agent = PPOAgent(PPOConfig(num_groups=3, factored=True), seed=0)
+ctl = FedAdaptController(w, VGG5.ops, num_groups=3, low_bw_threshold=None,
+                         agent=agent, seed=0)
+print("training the RL agent (400 truncated rounds)...")
+hist = train_rl_agent(sim, ctl, rounds=400)
+print(f"  final actions per group: {np.round(hist['actions'][-1], 2)} "
+      "(G1 native, G2/G3 -> OP1)")
+
+# --- 3. deploy: FedAdapt vs classic FL --------------------------------------
+deploy = SimulatedCluster(w, devices, server, VGG5.ops, iterations=100,
+                          jitter=0.0, seed=2, overhead_s=overhead)
+ctl2 = FedAdaptController(w, VGG5.ops, num_groups=3, low_bw_threshold=None,
+                          agent=agent)
+out = run_fl_with_controller(deploy, ctl2, rounds=5)
+fed = out["times"][-1]
+fl = deploy.round_times(deploy.native_ops(), 0)
+print(f"\n{'device':<14}{'classic FL':>12}{'FedAdapt':>12}{'saving':>9}")
+for d, a, b in zip(devices, fl, fed):
+    print(f"{d.name:<14}{a:>11.1f}s{b:>11.1f}s{1 - b / a:>8.0%}")
+print(f"{'ROUND (max)':<14}{fl.max():>11.1f}s{fed.max():>11.1f}s"
+      f"{1 - fed.max() / fl.max():>8.0%}   <- paper: -40%")

@@ -1,0 +1,9 @@
+"""Batched LM serving demo: prefill + KV-cache decode (greedy).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "lm16m", "--batch", "4", "--prompt-len", "64",
+          "--gen", "32"])

@@ -1,0 +1,1 @@
+from repro.checkpoint.ckpt import CheckpointManager, restore_tree, save_tree  # noqa: F401

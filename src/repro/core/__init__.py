@@ -1,0 +1,22 @@
+# The paper's primary contribution: adaptive layer offloading for FL —
+# cost model (Eq. 1), clustering (§IV), PPO agent (§IV), pre/post-processing
+# and the per-round controller (Fig. 2).
+from repro.core.agent import PPOAgent, PPOConfig  # noqa: F401
+from repro.core.clustering import Grouping, cluster_devices, elbow, kmeans  # noqa: F401
+from repro.core.controller import (  # noqa: F401
+    FedAdaptController,
+    RoundPlan,
+    run_fl_with_controller,
+    train_rl_agent,
+)
+from repro.core.costmodel import (  # noqa: F401
+    DeviceProfile,
+    Workload,
+    calibrate_linear,
+    iteration_time,
+    lm_workload,
+    slice_profile,
+    vgg_workload,
+)
+from repro.core.env import SimulatedCluster  # noqa: F401
+from repro.core import offload  # noqa: F401

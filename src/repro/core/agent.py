@@ -1,0 +1,263 @@
+"""The FedAdapt PPO agent (paper §IV) in pure JAX.
+
+Actor and critic are fully-connected nets with two hidden layers (64, 32) —
+exactly the paper's architecture.  The actor outputs a mean in (0, 1] per
+device group (sigmoid head); exploration uses a Gaussian whose stddev starts
+at 0.5 and decays exponentially (rate 0.9) after ``std_decay_after`` rounds —
+the paper's schedule.  PPO hyper-parameters follow §V-B: gamma = 0.9,
+lr = 1e-4 for both nets, update every 10 rounds, 50 reuse epochs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, constant
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class PPOConfig:
+    num_groups: int
+    hidden: Tuple[int, int] = (64, 32)
+    gamma: float = 0.9
+    lr: float = 1e-4
+    clip_eps: float = 0.2
+    update_every: int = 10          # rounds between updates
+    reuse_epochs: int = 50          # reuse of the last trajectory chunk
+    std_init: float = 0.5
+    std_decay: float = 0.9
+    std_decay_after: int = 200      # rounds (paper §V-B)
+    std_decay_every: int = 1        # paper: exponential decay per round
+    std_floor: float = 0.02
+    entropy_coef: float = 0.0
+    value_coef: float = 0.5
+    # Beyond-paper: factored per-group credit assignment.  Eq. 5's scalar
+    # reward makes each group's gradient depend on every other group's noise —
+    # the paper itself observes the resulting slow convergence for the
+    # low-bandwidth group (§V-C: 240 rounds, 'rewards from G1 and G2
+    # dominate').  With factored=True the reward is the per-group vector
+    # sum_{k in g} f_norm(T_k, B_k) and both the critic and the policy
+    # gradient are per-dimension.  Benchmarked in benchmarks/paper_fig5.py.
+    factored: bool = False
+
+    @property
+    def obs_dim(self) -> int:
+        return 2 * self.num_groups    # {T_t^g, mu_{t-1}^g} per group (Eq. 4)
+
+    @property
+    def act_dim(self) -> int:
+        return self.num_groups
+
+
+# =============================================================================
+# networks
+# =============================================================================
+def _mlp_init(key, dims: List[int]) -> Params:
+    p = {}
+    for i, (a, b) in enumerate(zip(dims[:-1], dims[1:])):
+        key, sub = jax.random.split(key)
+        p[f"w{i}"] = jax.random.normal(sub, (a, b), jnp.float32) / np.sqrt(a)
+        p[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    return p
+
+
+def _mlp_apply(p: Params, x: jnp.ndarray, n_layers: int) -> jnp.ndarray:
+    for i in range(n_layers):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n_layers - 1:
+            x = jnp.tanh(x)
+    return x
+
+
+def init_agent(cfg: PPOConfig, key) -> Params:
+    k1, k2 = jax.random.split(key)
+    dims_a = [cfg.obs_dim, *cfg.hidden, cfg.act_dim]
+    dims_c = [cfg.obs_dim, *cfg.hidden, cfg.act_dim if cfg.factored else 1]
+    return {"actor": _mlp_init(k1, dims_a), "critic": _mlp_init(k2, dims_c)}
+
+
+def actor_mean(cfg: PPOConfig, params: Params, obs: jnp.ndarray) -> jnp.ndarray:
+    """mu in (0, 1] per group."""
+    out = _mlp_apply(params["actor"], obs, len(cfg.hidden) + 1)
+    return jax.nn.sigmoid(out)
+
+
+def critic_value(cfg: PPOConfig, params: Params, obs: jnp.ndarray) -> jnp.ndarray:
+    out = _mlp_apply(params["critic"], obs, len(cfg.hidden) + 1)
+    return out if cfg.factored else out[..., 0]
+
+
+def current_std(cfg: PPOConfig, round_idx: int) -> float:
+    if round_idx <= cfg.std_decay_after:
+        return cfg.std_init
+    n = (round_idx - cfg.std_decay_after) // max(cfg.std_decay_every, 1)
+    return float(max(cfg.std_init * (cfg.std_decay ** n), cfg.std_floor))
+
+
+def sample_action(cfg: PPOConfig, params: Params, obs: jnp.ndarray,
+                  key, std: float) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (action clipped to (0, 1], log-prob of the raw gaussian)."""
+    mean = actor_mean(cfg, params, obs)
+    noise = jax.random.normal(key, mean.shape) * std
+    raw = mean + noise
+    logp = -0.5 * jnp.sum(
+        ((raw - mean) / std) ** 2 + 2 * jnp.log(std) + jnp.log(2 * jnp.pi),
+        axis=-1)
+    action = jnp.clip(raw, 1e-3, 1.0)
+    return action, logp
+
+
+def _log_prob_dims(mean: jnp.ndarray, std, raw: jnp.ndarray) -> jnp.ndarray:
+    """Per-dimension Gaussian log-prob (…, act_dim)."""
+    std = jnp.asarray(std)
+    return -0.5 * (((raw - mean) / std) ** 2
+                   + 2 * jnp.log(std) + jnp.log(2 * jnp.pi))
+
+
+def _log_prob(mean: jnp.ndarray, std, raw: jnp.ndarray) -> jnp.ndarray:
+    return jnp.sum(_log_prob_dims(mean, std, raw), axis=-1)
+
+
+# =============================================================================
+# PPO update
+# =============================================================================
+class Trajectory(NamedTuple):
+    obs: jnp.ndarray         # (T, obs_dim)
+    actions: jnp.ndarray     # (T, act_dim) raw (pre-clip) samples
+    logps: jnp.ndarray       # (T, act_dim) per-dim log-probs
+    rewards: jnp.ndarray     # (T,) scalar Eq.5, or (T, G) factored
+    next_obs: jnp.ndarray    # (T, obs_dim)
+
+
+def gae_advantages(cfg: PPOConfig, params: Params, traj: Trajectory,
+                   lam: float = 0.95):
+    """TD/GAE advantages with bootstrapped values.
+
+    The FL control problem is a *continuing* task observed in short truncated
+    buffers (update_every=10 rounds); plain discounted returns over a
+    truncated buffer create position-dominated advantages (early entries
+    always accumulate more reward), which stalls learning — bootstrapping
+    V(s_{t+1}) removes the truncation bias."""
+    v = critic_value(cfg, params, traj.obs)
+    v_next = critic_value(cfg, params, traj.next_obs)
+    delta = traj.rewards + cfg.gamma * v_next - v     # (T,) or (T, G)
+
+    def step(carry, d):
+        a = d + cfg.gamma * lam * carry
+        return a, a
+
+    init = jnp.zeros(delta.shape[1:], jnp.float32)
+    _, rev = jax.lax.scan(step, init, delta[::-1])
+    adv = rev[::-1]
+    return adv, adv + v       # (advantages, value targets)
+
+
+def ppo_loss(cfg: PPOConfig, params: Params, traj: Trajectory,
+             adv: jnp.ndarray, v_target: jnp.ndarray,
+             std: float) -> jnp.ndarray:
+    mean = actor_mean(cfg, params, traj.obs)
+    logp_dims = _log_prob_dims(mean, std, traj.actions)   # (T, act_dim)
+    values = critic_value(cfg, params, traj.obs)
+    adv = (adv - adv.mean(axis=0)) / (adv.std(axis=0) + 1e-8)
+    if cfg.factored:
+        # per-group ratios against per-group advantages — each action dim
+        # learns from its own devices' Eq. 5 terms only
+        ratio = jnp.exp(logp_dims - traj.logps)           # (T, G)
+    else:
+        ratio = jnp.exp(jnp.sum(logp_dims - traj.logps, axis=-1))  # (T,)
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1 - cfg.clip_eps, 1 + cfg.clip_eps) * adv
+    policy_loss = -jnp.mean(jnp.minimum(unclipped, clipped))
+    value_loss = jnp.mean((values - v_target) ** 2)
+    return policy_loss + cfg.value_coef * value_loss
+
+
+def make_update_fn(cfg: PPOConfig):
+    opt = adamw(schedule=constant(cfg.lr), weight_decay=0.0, clip_norm=0.5)
+
+    @jax.jit
+    def update(params, opt_state, obs, actions, logps, rewards, next_obs, std):
+        traj = Trajectory(obs, actions, logps, rewards, next_obs)
+
+        def epoch(carry, _):
+            params, opt_state = carry
+            adv, v_target = jax.tree_util.tree_map(
+                jax.lax.stop_gradient,
+                gae_advantages(cfg, params, traj))
+            grads = jax.grad(
+                lambda p: ppo_loss(cfg, p, traj, adv, v_target, std))(params)
+            params, opt_state = opt.update(params, grads, opt_state)
+            return (params, opt_state), None
+
+        (params, opt_state), _ = jax.lax.scan(
+            epoch, (params, opt_state), None, length=cfg.reuse_epochs)
+        return params, opt_state
+
+    return opt, update
+
+
+class PPOAgent:
+    """Stateful wrapper used by the controller / trainer loops."""
+
+    def __init__(self, cfg: PPOConfig, seed: int = 0):
+        self.cfg = cfg
+        self.key = jax.random.PRNGKey(seed)
+        self.key, sub = jax.random.split(self.key)
+        self.params = init_agent(cfg, sub)
+        self.opt, self._update = make_update_fn(cfg)
+        self.opt_state = self.opt.init(self.params)
+        self.round_idx = 0
+        self._buf: List[Tuple] = []
+        self._pending = None
+
+    # --- acting ---------------------------------------------------------
+    def act(self, obs: np.ndarray, explore: bool = True) -> np.ndarray:
+        obs_np = np.asarray(obs, np.float32)
+        # complete the pending transition with this obs as next_obs
+        if getattr(self, "_pending", None) is not None:
+            p_obs, p_raw, p_logp, p_rew = self._pending
+            self._buf.append((p_obs, p_raw, p_logp, p_rew, obs_np))
+            self._pending = None
+            if len(self._buf) >= self.cfg.update_every:
+                self._train_on_buffer()
+                self._buf = []
+        obs_j = jnp.asarray(obs_np)
+        if not explore:
+            self._last = None   # deployment: no learning transition
+            return np.asarray(actor_mean(self.cfg, self.params, obs_j))
+        std = current_std(self.cfg, self.round_idx)
+        self.key, sub = jax.random.split(self.key)
+        mean = actor_mean(self.cfg, self.params, obs_j)
+        raw = mean + jax.random.normal(sub, mean.shape) * std
+        logp = _log_prob_dims(mean, std, raw)
+        self._last = (obs_np, np.asarray(raw), np.asarray(logp), float(std))
+        return np.asarray(jnp.clip(raw, 1e-3, 1.0))
+
+    # --- learning --------------------------------------------------------
+    def observe(self, reward):
+        """reward: float (Eq. 5 scalar) or (G,) vector (factored mode).
+        No-op when the last action was non-exploratory (deployment)."""
+        if getattr(self, "_last", None) is None:
+            self.round_idx += 1
+            return
+        obs, raw, logp, _ = self._last
+        self._pending = (obs, raw, logp,
+                         np.asarray(reward, np.float32))
+        self.round_idx += 1
+
+    def _train_on_buffer(self):
+        obs = jnp.asarray([b[0] for b in self._buf])
+        actions = jnp.asarray([b[1] for b in self._buf])
+        logps = jnp.asarray([b[2] for b in self._buf])
+        rewards = jnp.asarray([b[3] for b in self._buf], jnp.float32)
+        next_obs = jnp.asarray([b[4] for b in self._buf])
+        std = current_std(self.cfg, self.round_idx)
+        self.params, self.opt_state = self._update(
+            self.params, self.opt_state, obs, actions, logps, rewards,
+            next_obs, jnp.float32(std))

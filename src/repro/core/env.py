@@ -1,0 +1,62 @@
+"""RL training environment: truncated FL rounds driven by the cost model.
+
+The paper trains the agent offline against a real testbed with 5-iteration
+truncated rounds; in this container the testbed is the Eq. 1 cost model
+(paper-calibrated device speeds for the faithful runs, v5e roofline-derived
+speeds for the datacenter runs) plus multiplicative jitter to emulate
+real-world variance.  Bandwidths follow a per-round schedule so §V-C / §V-D
+(changing network conditions) are reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.costmodel import DeviceProfile, Workload, iteration_time
+
+BandwidthFn = Callable[[int, int], float]     # (round, device_idx) -> bits/s
+
+
+@dataclasses.dataclass
+class SimulatedCluster:
+    """The 'testbed': devices + server + workload, timed via Eq. 1."""
+    workload: Workload
+    devices: List[DeviceProfile]
+    server_flops: float
+    op_candidates: Sequence[int]
+    iterations: int = 5                      # truncated FL rounds (paper §IV)
+    jitter: float = 0.0                      # lognormal sigma on speeds
+    overhead_s: float = 0.0
+    bandwidth_fn: Optional[BandwidthFn] = None
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.RandomState(self.seed)
+
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    def bandwidths(self, round_idx: int) -> np.ndarray:
+        if self.bandwidth_fn is None:
+            return np.asarray([d.bandwidth_bps for d in self.devices])
+        return np.asarray([self.bandwidth_fn(round_idx, i)
+                           for i in range(self.num_devices)])
+
+    def round_times(self, ops: Sequence[int], round_idx: int) -> np.ndarray:
+        """Per-device round time for the given per-device OPs."""
+        bw = self.bandwidths(round_idx)
+        out = []
+        for i, (dev, op) in enumerate(zip(self.devices, ops)):
+            speed = dev.flops_per_s
+            if self.jitter > 0:
+                speed *= float(np.exp(self._rng.randn() * self.jitter))
+            t = iteration_time(self.workload, op, speed, self.server_flops,
+                               bw[i], self.overhead_s)
+            out.append(t * self.iterations)
+        return np.asarray(out)
+
+    def native_ops(self) -> List[int]:
+        return [self.workload.num_layers] * self.num_devices

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    make_cifar_like,
+    make_token_stream,
+    split_clients,
+)
+from repro.data.loader import ClientLoader  # noqa: F401

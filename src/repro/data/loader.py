@@ -1,0 +1,42 @@
+"""Per-client batching with deterministic shuffling (resumable: the loader
+state is just (epoch, cursor), checkpointed alongside the model)."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, Tuple
+
+import numpy as np
+
+
+class ClientLoader:
+    def __init__(self, data: Dict[str, np.ndarray], batch_size: int,
+                 seed: int = 0):
+        self.data = data
+        self.n = len(next(iter(data.values())))
+        self.batch_size = min(batch_size, self.n)
+        self.seed = seed
+        self.epoch = 0
+        self.cursor = 0
+        self._perm = self._permutation(0)
+
+    def _permutation(self, epoch: int) -> np.ndarray:
+        return np.random.RandomState(self.seed + epoch).permutation(self.n)
+
+    def state(self) -> Tuple[int, int]:
+        return (self.epoch, self.cursor)
+
+    def restore(self, state: Tuple[int, int]):
+        self.epoch, self.cursor = state
+        self._perm = self._permutation(self.epoch)
+
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        if self.cursor + self.batch_size > self.n:
+            self.epoch += 1
+            self.cursor = 0
+            self._perm = self._permutation(self.epoch)
+        idx = self._perm[self.cursor:self.cursor + self.batch_size]
+        self.cursor += self.batch_size
+        return {k: v[idx] for k, v in self.data.items()}
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        while True:
+            yield self.next_batch()

@@ -1,0 +1,3 @@
+from repro.fl.fedavg import fedavg, fedavg_delta, model_bytes  # noqa: F401
+from repro.fl.comm import Transport, constant_bandwidth, paper_schedule  # noqa: F401
+from repro.fl.loop import FLConfig, run_federated  # noqa: F401

@@ -1,0 +1,47 @@
+"""Simulated transport between clients and the server.
+
+The paper emulates Wi-Fi / 4G with Linux ``tc``; here the transport is a
+bandwidth schedule (bits/s per round per device) with time accounting and
+optional compression of the payload (int8 smashed data, top-k deltas).
+The same abstraction models cross-pod DCN links in the datacenter runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+BandwidthFn = Callable[[int, int], float]
+
+
+@dataclasses.dataclass
+class Transport:
+    bandwidth_fn: BandwidthFn                     # (round, device) -> bits/s
+    compression_ratio: float = 1.0                # <1 => compressed payloads
+    latency_s: float = 0.0
+
+    def transfer_time(self, nbytes: float, round_idx: int,
+                      device: int) -> float:
+        bw = self.bandwidth_fn(round_idx, device)
+        return self.latency_s + (nbytes * self.compression_ratio * 8.0) / bw
+
+    def round_comm_time(self, up_bytes: float, down_bytes: float,
+                        round_idx: int, device: int) -> float:
+        return (self.transfer_time(up_bytes, round_idx, device)
+                + self.transfer_time(down_bytes, round_idx, device))
+
+
+def constant_bandwidth(bps: float) -> BandwidthFn:
+    return lambda r, d: bps
+
+
+def paper_schedule(base_bps: float = 75e6, low_bps: float = 10e6,
+                   start_round: int = 50, slot_len: int = 10) -> BandwidthFn:
+    """Paper §V-D: rounds [start, start+5*slot_len) are divided into 5 slots;
+    in slot i, device i is throttled to ``low_bps`` (Jetson first, Pi3-2
+    last); all other devices keep ``base_bps``."""
+    def fn(round_idx: int, device: int) -> float:
+        if round_idx < start_round:
+            return base_bps
+        slot = (round_idx - start_round) // slot_len
+        return low_bps if slot == device else base_bps
+    return fn

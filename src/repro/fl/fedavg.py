@@ -1,0 +1,59 @@
+"""FedAvg aggregation [McMahan et al. 2017] — the server step in both
+classic FL and FedAdapt (the paper keeps FedAvg unchanged, which is why
+Fig. 9's accuracy parity holds).
+
+``fedavg_delta`` aggregates parameter *deltas* (client - global) so the same
+function serves (a) classic weight averaging, (b) straggler-dropped rounds
+with renormalized weights, and (c) compressed cross-pod sync (top-k deltas,
+kernels/topk_compress).
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+def fedavg(client_params: List[Params],
+           weights: Optional[Sequence[float]] = None) -> Params:
+    """Weighted average of parameter pytrees."""
+    k = len(client_params)
+    w = np.ones(k) / k if weights is None else np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def avg(*leaves):
+        out = sum(float(wi) * leaf.astype(jnp.float32)
+                  for wi, leaf in zip(w, leaves))
+        return out.astype(leaves[0].dtype)
+
+    return jax.tree_util.tree_map(avg, *client_params)
+
+
+def fedavg_delta(global_params: Params, client_params: List[Params],
+                 weights: Optional[Sequence[float]] = None,
+                 compress_fn=None) -> Params:
+    """global + mean_k w_k (client_k - global), optionally compressing each
+    client delta (top-k sparsification / int8) before averaging."""
+    k = len(client_params)
+    w = np.ones(k) / k if weights is None else np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def agg(g, *cs):
+        acc = jnp.zeros(g.shape, jnp.float32)
+        for wi, c in zip(w, cs):
+            delta = c.astype(jnp.float32) - g.astype(jnp.float32)
+            if compress_fn is not None:
+                delta = compress_fn(delta)
+            acc = acc + float(wi) * delta
+        return (g.astype(jnp.float32) + acc).astype(g.dtype)
+
+    return jax.tree_util.tree_map(agg, global_params, *client_params)
+
+
+def model_bytes(params: Params) -> int:
+    return int(sum(leaf.size * leaf.dtype.itemsize
+                   for leaf in jax.tree_util.tree_leaves(params)))

@@ -1,0 +1,172 @@
+"""Federated round loops: classic FL, SplitFed (static OP), and FedAdapt.
+
+The model updates are *real* JAX training (VGG on synthetic CIFAR, through
+the actual split execution path ``models.vgg.split_loss`` so the offloading
+cut is exercised); the round *times* come from the Eq. 1 cost model (paper-
+calibrated device speeds) — matching how this CPU-only container can be
+faithful to a physical testbed.
+
+Fault tolerance is first-class: deadline straggler drops, failure injection,
+atomic checkpoints with bitwise resume, and elastic membership (all drilled
+in tests/test_runtime.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs.vgg import VGGConfig
+from repro.core.controller import FedAdaptController
+from repro.core.env import SimulatedCluster
+from repro.data.loader import ClientLoader
+from repro.fl.fedavg import fedavg_delta
+from repro.models import vgg as vgg_model
+from repro.runtime.failures import FailureInjector
+from repro.runtime.straggler import deadline_mask, reweight
+
+
+@dataclasses.dataclass
+class FLConfig:
+    rounds: int = 100
+    local_iters: int = 10
+    batch_size: int = 100
+    lr: float = 0.01
+    lr_drop_round: int = 50          # paper: 0.001 from round 50
+    lr_drop_factor: float = 0.1
+    mode: str = "fl"                 # fl | sfl | fedadapt
+    static_op: Optional[int] = None  # sfl: uniform OP for all devices
+    deadline_factor: float = 0.0     # >0 enables straggler drop
+    fail_prob: float = 0.0
+    augment: bool = True             # horizontal flip p=0.5 (paper §V-B)
+    seed: int = 0
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+
+
+def _make_local_step(cfg: VGGConfig):
+    @partial(jax.jit, static_argnames=("op",))
+    def step(params, images, labels, lr, op):
+        loss, grads = jax.value_and_grad(
+            lambda p: vgg_model.split_loss(
+                cfg, p, {"images": images, "labels": labels}, op))(params)
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new, loss
+    return step
+
+
+def run_federated(
+    cfg: VGGConfig,
+    clients_data: List[Dict[str, np.ndarray]],
+    test_data: Dict[str, np.ndarray],
+    fl: FLConfig,
+    sim: Optional[SimulatedCluster] = None,
+    controller: Optional[FedAdaptController] = None,
+    resume: bool = False,
+) -> Dict[str, np.ndarray]:
+    """Returns history: accuracy, per-round max time, per-device times, ops."""
+    K = len(clients_data)
+    params = vgg_model.init(cfg, jax.random.PRNGKey(fl.seed))
+    local_step = _make_local_step(cfg)
+    loaders = [ClientLoader(d, fl.batch_size, seed=fl.seed + i)
+               for i, d in enumerate(clients_data)]
+    injector = FailureInjector(fl.fail_prob, seed=fl.seed)
+    n_layers = len(cfg.layers)
+    sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
+
+    mgr = None
+    start_round = 0
+    if fl.checkpoint_dir:
+        mgr = CheckpointManager(fl.checkpoint_dir)
+        if resume:
+            restored, step = mgr.restore_latest(params)
+            if restored is not None:
+                params = restored
+                start_round = int(step)
+                # fast-forward the deterministic loaders so a resumed run
+                # sees the exact batches of an uninterrupted one (bitwise
+                # resume — tests/test_runtime.py)
+                for ld in loaders:
+                    for _ in range(start_round * fl.local_iters):
+                        ld.next_batch()
+
+    # round-0 baselines (classic FL, no offloading)
+    times = (sim.round_times([n_layers] * K, 0) if sim is not None
+             else np.ones(K))
+    if controller is not None and controller.baselines is None:
+        controller.begin(times)
+
+    hist: Dict[str, list] = {"accuracy": [], "round_time": [], "ops": [],
+                             "times": [], "dropped": []}
+    acc_fn = jax.jit(lambda p, im, lb: vgg_model.accuracy(
+        cfg, p, {"images": im, "labels": lb}))
+
+    for r in range(start_round, fl.rounds):
+        lr = fl.lr * (fl.lr_drop_factor if r >= fl.lr_drop_round else 1.0)
+        # --- plan offloading for this round --------------------------------
+        if fl.mode == "fedadapt" and controller is not None and sim is not None:
+            plan = controller.plan(times, sim.bandwidths(r), explore=False)
+            ops = plan.ops
+        elif fl.mode == "sfl":
+            ops = [fl.static_op if fl.static_op is not None else n_layers] * K
+        else:
+            ops = [n_layers] * K
+        # --- local training -------------------------------------------------
+        alive = injector.round_mask(K)
+        client_params: List = []
+        for k in range(K):
+            if not alive[k]:
+                continue
+            p_k = params
+            for it in range(fl.local_iters):
+                batch = loaders[k].next_batch()
+                images = batch["images"]
+                if fl.augment:
+                    # stateless per-(round, client, iter) flip rng so a
+                    # resumed run reproduces the same augmentations
+                    flip_rng = np.random.RandomState(
+                        (fl.seed * 1_000_003 + r * 1009 + k * 31 + it)
+                        % (2 ** 31))
+                    flip = flip_rng.rand(len(images)) < 0.5
+                    images = np.where(flip[:, None, None, None],
+                                      images[:, :, ::-1, :], images)
+                p_k, _ = local_step(p_k, jnp.asarray(images),
+                                    jnp.asarray(batch["labels"]),
+                                    jnp.float32(lr), ops[k])
+            client_params.append(p_k)
+        # --- timing + straggler handling ------------------------------------
+        if sim is not None:
+            times = sim.round_times(ops, r)
+        keep = np.ones(K, bool)
+        if fl.deadline_factor > 0:
+            keep = deadline_mask(times, fl.deadline_factor)
+        keep &= alive
+        weights = reweight(sizes, keep)
+        survivors = [cp for k, cp in zip(np.flatnonzero(alive), client_params)
+                     if keep[k]]
+        surv_w = [weights[k] for k in np.flatnonzero(alive) if keep[k]]
+        if survivors:
+            params = fedavg_delta(params, survivors, surv_w)
+        if controller is not None and fl.mode == "fedadapt":
+            controller.feedback(times)
+        # --- evaluation + checkpoint ----------------------------------------
+        acc = float(acc_fn(params, jnp.asarray(test_data["images"]),
+                           jnp.asarray(test_data["labels"])))
+        hist["accuracy"].append(acc)
+        hist["round_time"].append(float(np.max(times[keep]))
+                                  if keep.any() else float(np.max(times)))
+        hist["ops"].append(list(ops))
+        hist["times"].append(times.copy())
+        hist["dropped"].append(int(K - keep.sum()))
+        if mgr is not None and fl.checkpoint_every and \
+                (r + 1) % fl.checkpoint_every == 0:
+            mgr.save(params, r + 1)
+
+    hist_np = {k: np.asarray(v) for k, v in hist.items()}
+    hist_np["params"] = params
+    return hist_np

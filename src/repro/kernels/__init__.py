@@ -1,0 +1,5 @@
+# Pallas TPU kernels (validated with interpret=True on CPU):
+#   flash_attention — fused attn: causal / sliding-window / softcap / GQA
+#   ssd_scan        — Mamba-2 chunked SSD forward
+#   topk_compress   — block-local top-k gradient sparsification
+#   quant_transfer  — int8 rowwise quantization of split-point activations

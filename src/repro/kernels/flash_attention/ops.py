@@ -1,0 +1,36 @@
+"""jit'd public wrapper for the flash-attention kernel.
+
+``flash_attention`` takes the model-zoo layout (B, S, H, D) and handles the
+layout transpose, GQA head grouping, padding, and the interpret-mode switch
+(CPU validation vs TPU execution).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                   "block_q", "block_k", "interpret"))
+def flash_attention(
+    q: jnp.ndarray,            # (B, Sq, H, D)
+    k: jnp.ndarray,            # (B, Sk, KV, D)
+    v: jnp.ndarray,            # (B, Sk, KV, D)
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention_bhsd(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out.transpose(0, 2, 1, 3)

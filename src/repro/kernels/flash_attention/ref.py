@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Implements exactly the same semantics (causal, sliding window, logit
+softcap, GQA) with naive materialized scores — the ground truth for the
+allclose sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q: jnp.ndarray,           # (B, Sq, H, D)
+    k: jnp.ndarray,           # (B, Sk, KV, D)
+    v: jnp.ndarray,           # (B, Sk, KV, D)
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    q_offset: int = 0,        # absolute position of q[0] (chunked prefill)
+) -> jnp.ndarray:
+    B, Sq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq) + q_offset
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > (q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)     # fully-masked rows -> 0
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)

@@ -1,0 +1,68 @@
+"""Rowwise int8 quantization of the split-point activations ('smashed
+data') as a Pallas TPU kernel — the paper's future-work communication
+reduction, made first-class.
+
+Cuts the L(mu) term of Eq. 1 by 2x vs bf16 (4x vs fp32) at the cost of one
+VMEM pass: each (row-block x d_model) tile computes a rowwise absmax scale
+and packs to int8.  The dequant kernel runs on the server slice.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _quant_kernel(x_ref, q_ref, s_ref):
+    x = x_ref[...].astype(jnp.float32)                  # (BR, C)
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127)
+    q_ref[...] = q.astype(jnp.int8)
+    s_ref[...] = scale[:, 0]
+
+
+def _dequant_kernel(q_ref, s_ref, o_ref):
+    q = q_ref[...].astype(jnp.float32)
+    o_ref[...] = (q * s_ref[...][:, None]).astype(o_ref.dtype)
+
+
+def quantize_pallas(x: jnp.ndarray, block_rows: int = 256,
+                    interpret: bool = False):
+    """x (rows, cols) -> (int8 (rows, cols), fp32 scales (rows,))."""
+    R, C = x.shape
+    br = min(block_rows, R)
+    assert R % br == 0, "pad rows upstream"
+    grid = (R // br,)
+    return pl.pallas_call(
+        _quant_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                   pl.BlockSpec((br,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((R, C), jnp.int8),
+                   jax.ShapeDtypeStruct((R,), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(x)
+
+
+def dequantize_pallas(q: jnp.ndarray, scales: jnp.ndarray,
+                      out_dtype=jnp.float32, block_rows: int = 256,
+                      interpret: bool = False) -> jnp.ndarray:
+    R, C = q.shape
+    br = min(block_rows, R)
+    assert R % br == 0
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(R // br,),
+        in_specs=[pl.BlockSpec((br, C), lambda i: (i, 0)),
+                  pl.BlockSpec((br,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((R, C), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(q, scales)

@@ -1,0 +1,18 @@
+"""Oracle for rowwise-absmax int8 quantization of cut activations."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def quant_ref(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x (rows, cols) -> (int8 q, fp32 rowwise scale)."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale[..., 0]
+
+
+def dequant_ref(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    return q.astype(jnp.float32) * scale[..., None]

@@ -1,0 +1,24 @@
+"""jit'd wrapper for the SSD-scan kernel (handles seq padding)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = True):
+    """x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N) -> y (B,S,H,P)."""
+    B, S, H, P = x.shape
+    q = min(chunk, S)
+    pad = (-S) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    y = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=q, interpret=interpret)
+    return y[:, :S]

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the chunked-SSD kernel: delegates to the model zoo's
+``ssd_chunked`` (models/ssm.py), which is itself validated against the
+sequential recurrence in tests/test_kernels.py."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, Bm, Cm, chunk: int):
+    y, state = ssd_chunked(x, dt, A, Bm, Cm, chunk)
+    return y, state
+
+
+def ssd_sequential(x, dt, A, Bm, Cm):
+    """O(S) sequential recurrence — the definitional ground truth."""
+    import jax
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+
+    def step(state, inputs):
+        xt, dtt, bt, ct = inputs
+        decay = jnp.exp(dtt * A)[..., None, None]          # (B,H,1,1)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        state = decay * state + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, state)
+        return state, y
+
+    init = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    xs = (x.swapaxes(0, 1).astype(jnp.float32),
+          dt.swapaxes(0, 1).astype(jnp.float32),
+          Bm.swapaxes(0, 1).astype(jnp.float32),
+          Cm.swapaxes(0, 1).astype(jnp.float32))
+    state, ys = jax.lax.scan(step, init, xs)
+    return ys.swapaxes(0, 1).astype(x.dtype), state.astype(x.dtype)

@@ -1,0 +1,54 @@
+"""jit'd wrapper: top-k delta compression with error feedback.
+
+``compress_tree`` sparsifies a gradient/delta pytree leaf-wise and returns
+(compressed_tree, new_error_feedback); the residual is re-added next round
+(error feedback keeps FedAvg convergence — Stich et al., arXiv:1809.07599).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_compress.topk_compress import topk_compress_pallas
+
+
+@partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_compress(x: jnp.ndarray, k: int, block: int = 1024,
+                  interpret: bool = True) -> jnp.ndarray:
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    b = min(block, n)
+    pad = (-n) % b
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    kk = min(k, b)
+    out = topk_compress_pallas(flat, kk, block=b, interpret=interpret)
+    return out[:n].reshape(x.shape).astype(x.dtype)
+
+
+def compress_tree(tree: Any, error: Optional[Any], density: float = 0.01,
+                  block: int = 1024, interpret: bool = True
+                  ) -> Tuple[Any, Any]:
+    """Error-feedback top-k over every leaf; density = k/block."""
+    k = max(1, int(density * block))
+
+    def one(leaf, err):
+        carried = leaf.astype(jnp.float32) + (
+            0.0 if err is None else err.astype(jnp.float32))
+        comp = topk_compress(carried, k, block, interpret)
+        return comp.astype(leaf.dtype), (carried - comp)
+
+    if error is None:
+        error = jax.tree_util.tree_map(lambda _: None, tree,
+                                       is_leaf=lambda x: x is None)
+        pairs = jax.tree_util.tree_map(lambda l: one(l, None), tree)
+    else:
+        pairs = jax.tree_util.tree_map(one, tree, error)
+    comp = jax.tree_util.tree_map(lambda t: t[0], pairs,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+    new_err = jax.tree_util.tree_map(lambda t: t[1], pairs,
+                                     is_leaf=lambda t: isinstance(t, tuple))
+    return comp, new_err

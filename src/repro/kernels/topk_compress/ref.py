@@ -1,0 +1,20 @@
+"""Oracle for block-local top-k gradient sparsification."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_compress_ref(x: jnp.ndarray, k: int, block: int) -> jnp.ndarray:
+    """Keep the k largest-|.| entries in each contiguous block, zero the rest.
+    x: (n,) with n % block == 0."""
+    n = x.shape[0]
+    xb = x.reshape(n // block, block)
+    mag = jnp.abs(xb)
+    thresh = jax.lax.top_k(mag, k)[0][:, -1:]           # k-th largest per block
+    keep = mag >= thresh
+    # guard against ties producing > k survivors: keep first k by magnitude
+    order = jnp.argsort(-mag, axis=1)
+    rank = jnp.argsort(order, axis=1)
+    keep = keep & (rank < k)
+    return jnp.where(keep, xb, 0.0).reshape(n)

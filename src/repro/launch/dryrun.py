@@ -1,0 +1,334 @@
+"""Multi-pod dry-run: ``.lower().compile()`` every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware:
+  * the 16x16 single-pod mesh (roofline source) and the 2x16x16 multi-pod
+    mesh (proves the 'pod' axis shards) both compile for every runnable cell;
+  * ``memory_analysis()`` proves it fits; ``cost_analysis()`` + HLO collective
+    parsing feed EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh both] [--jobs 4]
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>[__<variant>].json
+"""
+# The VERY FIRST lines — before ANY other import, since jax locks the device
+# count on first init:
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, cell_is_runnable, get_config, ARCH_NAMES  # noqa: E402
+from repro.launch import steps as S  # noqa: E402
+from repro.launch import inputs as I  # noqa: E402
+from repro.launch.hlo_analysis import collective_stats, cost_stats, memory_stats  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.parallel.sharding import make_axis_rules, named_shardings, use_rules  # noqa: E402
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                         "artifacts", "dryrun")
+
+
+def _logits_spec(rules, batch_size, vocab):
+    from jax.sharding import PartitionSpec as P
+    b = rules.resolve("batch", batch_size)
+    v = rules.resolve("vocab", vocab)
+    return P(b, v)
+
+
+def _build_cell(cfg, shape, mesh, rules, unroll: bool):
+    """Construct (make_jitted, args, model_flops) for one cell+config."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dtype = jnp.bfloat16
+    params_shapes = S.abstract_params(cfg, dtype)
+    p_specs = S.model_param_pspecs(cfg, params_shapes, rules)
+    p_shard = named_shardings(p_specs, mesh)
+
+    if shape.kind == "train":
+        opt = S.make_opt(cfg)
+        opt_shapes = S.abstract_opt_state(opt, params_shapes)
+        o_specs = S.opt_pspecs(opt_shapes, params_shapes, p_specs, rules)
+        o_shard = named_shardings(o_specs, mesh)
+        batch = I.train_batch_specs(cfg, shape, dtype)
+        b_shard = named_shardings(I.batch_pspecs(cfg, batch, rules), mesh)
+        jitted = jax.jit(
+            S.make_train_step(cfg, opt, unroll),
+            in_shardings=(p_shard, o_shard, b_shard),
+            out_shardings=(NamedSharding(mesh, P()), p_shard, o_shard),
+            donate_argnums=(0, 1))
+        args = (params_shapes, opt_shapes, batch)
+        model_flops = 6.0 * cfg.active_param_count() * shape.tokens
+    elif shape.kind == "prefill":
+        batch = I.prefill_batch_specs(cfg, shape, dtype)
+        b_shard = named_shardings(I.batch_pspecs(cfg, batch, rules), mesh)
+        cache = I.cache_shapes(cfg, shape, dtype)
+        c_shard = named_shardings(I.cache_pspecs(cfg, cache, rules), mesh)
+        jitted = jax.jit(
+            S.make_prefill_step(cfg, shape, unroll),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(
+                NamedSharding(mesh, _logits_spec(
+                    rules, shape.global_batch, cfg.vocab_size)),
+                c_shard))
+        args = (params_shapes, batch)
+        model_flops = 2.0 * cfg.active_param_count() * shape.tokens
+    else:  # decode
+        cache, token, pos = I.decode_inputs(cfg, shape)
+        cache = jax.tree_util.tree_map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, dtype)
+            if l.dtype != jnp.int32 else l, cache)
+        c_shard = named_shardings(I.cache_pspecs(cfg, cache, rules), mesh)
+        jitted = jax.jit(
+            S.make_decode_step(cfg, unroll),
+            in_shardings=(
+                p_shard, c_shard,
+                NamedSharding(mesh, P(rules.resolve(
+                    "batch", shape.global_batch), None)),
+                NamedSharding(mesh, P())),
+            out_shardings=(
+                NamedSharding(mesh, _logits_spec(
+                    rules, shape.global_batch, cfg.vocab_size)),
+                c_shard),
+            donate_argnums=(1,))
+        args = (params_shapes, cache, token,
+                jax.ShapeDtypeStruct((), jnp.int32))
+        model_flops = 2.0 * cfg.active_param_count() * shape.global_batch
+    return jitted, args, model_flops
+
+
+def _lower_compile(cfg, shape, mesh, rules, unroll):
+    jitted, args, model_flops = _build_cell(cfg, shape, mesh, rules, unroll)
+    lowered = jitted.lower(*args)
+    compiled = lowered.compile()
+    return lowered, compiled, model_flops
+
+
+def _extrapolated_cost(cfg, shape, mesh, rules) -> dict:
+    """True per-step cost totals via two-point layer extrapolation.
+
+    XLA's cost_analysis counts a while-loop body once regardless of trip
+    count, so instead of unrolling the full model (minutes-to-hours of
+    compile on 1 core), lower *unrolled* reduced-depth models with P and 2P
+    layers (P = len(layer_pattern)) at the production input shapes and
+    extrapolate linearly:  per-group = F(2P) - F(P); total = F(P) +
+    per-group * (L/P - 1).  Remainder layers (hybrid: 38 = 12*3 + 2) are
+    charged fractionally.  Exact for homogeneous stacks; CE/embed overhead
+    lands in F(P) and is counted once, as it should be.
+    """
+    import dataclasses
+    P_len = len(cfg.layer_pattern)
+    if cfg.family == "encdec":
+        P_len = 1
+    # probe at 2P and 4P layers: 1-layer modules let the SPMD partitioner
+    # make boundary choices (e.g. gathering a seq-sharded cache) that it
+    # abandons at depth, which breaks the linear fit
+    L1, L2 = 2 * P_len, 4 * P_len
+    mult = (cfg.num_layers - L1) / (L2 - L1)
+
+    def reduced(n_layers):
+        kw = {"num_layers": n_layers}
+        if cfg.family == "encdec":
+            kw["encoder_layers"] = n_layers
+        return dataclasses.replace(cfg, **kw)
+
+    def measure(cfg_mod):
+        _, compiled, _ = _lower_compile(cfg_mod, shape, mesh, rules,
+                                        unroll=True)
+        cost = cost_stats(compiled)
+        coll = collective_stats(compiled.as_text())
+        return cost, coll
+
+    t0 = time.time()
+    cost1, coll1 = measure(reduced(L1))
+    cost2, coll2 = measure(reduced(L2))
+
+    def extrap(d1, d2):
+        keys = set(d1) | set(d2)
+        return {k: d1.get(k, 0.0) + (d2.get(k, 0.0) - d1.get(k, 0.0)) * mult
+                for k in keys}
+
+    cost = extrap(cost1, cost2)
+    coll = {op: {
+        "bytes": coll1[op]["bytes"]
+        + (coll2[op]["bytes"] - coll1[op]["bytes"]) * mult,
+        "count": coll1[op]["count"]
+        + (coll2[op]["count"] - coll1[op]["count"]) * mult,
+    } for op in coll1}
+    return {
+        "status": "ok",
+        "method": f"2-point extrapolation L1={L1} L2={L2} mult={mult:.2f}",
+        "seconds": round(time.time() - t0, 2),
+        "cost": cost,
+        "collectives_total": coll["total"],
+        "collectives": coll,
+        "probe_cost_1": cost1,
+        "probe_cost_2": cost2,
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             variant: str = "baseline", opt_flags=None) -> dict:
+    t0 = time.time()
+    cfg = get_config(arch)
+    if opt_flags:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **opt_flags)
+    shape = SHAPES[shape_name]
+    ok, why = cell_is_runnable(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant, "kind": shape.kind,
+        "params": cfg.param_count(),
+        "active_params": cfg.active_param_count(),
+    }
+    if not ok:
+        result.update(status="skipped", reason=why)
+        return result
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rules = make_axis_rules(mesh)
+    chips = mesh.devices.size
+
+    with use_rules(rules):
+        t_lower0 = time.time()
+        lowered, compiled, model_flops = _lower_compile(
+            cfg, shape, mesh, rules, unroll=False)
+        t_comp = time.time() - t_lower0
+
+        cost = cost_stats(compiled)
+        mem = memory_stats(compiled)
+        try:
+            hlo = compiled.as_text()
+        except Exception:
+            hlo = lowered.as_text()
+        coll = collective_stats(hlo)
+
+        # roofline terms are single-pod only (spec): skip the accounting
+        # pass on the multi-pod mesh
+        unroll_info = {"status": "skipped (multi-pod)"}
+        if not multi_pod:
+            try:
+                unroll_info = _extrapolated_cost(cfg, shape, mesh, rules)
+            except Exception as e:
+                unroll_info = {
+                    "status": f"error: {type(e).__name__}: {e}",
+                    "traceback": traceback.format_exc()[-2000:]}
+
+    result.update(
+        status="ok",
+        chips=int(chips),
+        compile_s=round(t_comp, 2),
+        total_s=round(time.time() - t0, 2),
+        cost=cost,
+        memory=mem,
+        collectives={k: v for k, v in coll.items()},
+        unrolled=unroll_info,
+        model_flops=model_flops,
+        hlo_bytes_len=len(hlo),
+    )
+    return result
+
+
+def cell_path(out_dir, arch, shape_name, mesh_name, variant="baseline"):
+    v = "" if variant == "baseline" else f"__{variant}"
+    return os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}{v}.json")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_NAMES)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--jobs", type=int, default=2)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--opt-flags", default="",
+                    help="json dict of ModelConfig overrides (hillclimb)")
+    ap.add_argument("--out", default=os.path.abspath(ARTIFACTS))
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        # spawn one subprocess per cell (isolation + parallelism)
+        jobs = []
+        meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+        for arch in ARCH_NAMES:
+            for shape_name in SHAPES:
+                for mesh_name in meshes:
+                    path = cell_path(args.out, arch, shape_name, mesh_name,
+                                     args.variant)
+                    if os.path.exists(path) and not args.force:
+                        continue
+                    jobs.append((arch, shape_name, mesh_name))
+        print(f"{len(jobs)} cells to run, {args.jobs} at a time",
+              flush=True)
+        running = []
+        while jobs or running:
+            while jobs and len(running) < args.jobs:
+                arch, shape_name, mesh_name = jobs.pop(0)
+                cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                       "--arch", arch, "--shape", shape_name,
+                       "--mesh", mesh_name, "--out", args.out,
+                       "--variant", args.variant]
+                if args.opt_flags:
+                    cmd += ["--opt-flags", args.opt_flags]
+                if args.force:
+                    cmd += ["--force"]
+                p = subprocess.Popen(cmd)
+                running.append((p, arch, shape_name, mesh_name))
+                print(f"LAUNCH {arch} {shape_name} {mesh_name}", flush=True)
+            time.sleep(2)
+            still = []
+            for p, a, s, m in running:
+                if p.poll() is None:
+                    still.append((p, a, s, m))
+                else:
+                    print(f"DONE({p.returncode}) {a} {s} {m}", flush=True)
+            running = still
+        return
+
+    assert args.arch and args.shape
+    mesh_name = args.mesh if args.mesh != "both" else "single"
+    path = cell_path(args.out, args.arch, args.shape, mesh_name, args.variant)
+    if os.path.exists(path) and not args.force:
+        print(f"exists: {path}")
+        return
+    opt_flags = json.loads(args.opt_flags) if args.opt_flags else None
+    try:
+        result = run_cell(args.arch, args.shape, mesh_name == "multi",
+                          args.variant, opt_flags)
+    except Exception as e:
+        result = {
+            "arch": args.arch, "shape": args.shape,
+            "mesh": "2x16x16" if mesh_name == "multi" else "16x16",
+            "variant": args.variant,
+            "status": "error",
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-4000:],
+        }
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+    print(json.dumps({k: v for k, v in result.items()
+                      if k not in ("traceback", "collectives")},
+                     indent=1, default=str))
+    if result["status"] == "ok":
+        print("memory_analysis:", result.get("memory"))
+        print("cost_analysis:", result.get("cost"))
+    sys.exit(0 if result["status"] in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

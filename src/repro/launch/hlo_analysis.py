@@ -1,0 +1,98 @@
+"""Post-SPMD HLO analysis: collective bytes per op type.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+collective term is derived by parsing the compiled module text and summing
+the output-tensor bytes of every collective op (all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute), counting async ``-start``
+ops once and skipping their ``-done`` halves.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# e.g.:  %ag = bf16[4,128]{1,0} all-gather(...)   or  (bf16[..],...) all-reduce-start(
+_OP_RE = re.compile(
+    r"=\s*(?P<lhs>\(?[^)=]*?\)?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<suffix>-start|-done)?\(")
+
+
+def shape_bytes(dtype: str, dims_str: str) -> int:
+    size = _DTYPE_BYTES.get(dtype)
+    if size is None:
+        return 0
+    n = 1
+    if dims_str.strip():
+        for d in dims_str.split(","):
+            n *= int(d)
+    return n * size
+
+
+def collective_stats(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Returns {op_type: {bytes, count}} plus a 'total' entry."""
+    out: Dict[str, Dict[str, float]] = {
+        op: {"bytes": 0.0, "count": 0} for op in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if m.group("suffix") == "-done":
+            continue
+        lhs = m.group("lhs")
+        nbytes = sum(shape_bytes(d, s) for d, s in _SHAPE_RE.findall(lhs))
+        # async -start LHS is a tuple (operand, result, ...): halve to avoid
+        # double counting the operand alias
+        if m.group("suffix") == "-start" and lhs.strip().startswith("("):
+            nbytes = nbytes / 2
+        op = m.group("op")
+        out[op]["bytes"] += nbytes
+        out[op]["count"] += 1
+    out["total"] = {
+        "bytes": sum(v["bytes"] for k, v in out.items() if k != "total"),
+        "count": sum(v["count"] for k, v in out.items() if k != "total"),
+    }
+    return out
+
+
+def memory_stats(compiled) -> Dict[str, float]:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception:
+        return {}
+    if ma is None:
+        return {}
+    out = {}
+    for attr in ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "temp_size_in_bytes",
+                 "alias_size_in_bytes", "peak_memory_in_bytes"):
+        v = getattr(ma, attr, None)
+        if v is not None:
+            out[attr] = float(v)
+    return out
+
+
+def cost_stats(compiled) -> Dict[str, float]:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception:
+        return {}
+    if ca is None:
+        return {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    out = {}
+    for k in ("flops", "bytes accessed", "transcendentals", "optimal_seconds"):
+        if k in ca:
+            out[k.replace(" ", "_")] = float(ca[k])
+    return out

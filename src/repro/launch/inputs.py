@@ -1,0 +1,113 @@
+"""``input_specs``: ShapeDtypeStruct stand-ins for every model input of every
+(arch x shape) cell — weak-type-correct, shardable, zero allocation.
+
+Also builds the PartitionSpecs for inputs, params (via parallel/sharding
+path rules), optimizer state and KV/SSM caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.parallel.sharding import AxisRules
+
+Specs = Any
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def text_len(cfg: ModelConfig, seq: int) -> int:
+    return seq - cfg.num_patches if cfg.family == "vlm" else seq
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      dtype=jnp.bfloat16) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, text_len(cfg, S)), jnp.int32),
+        "labels": _sds((B, text_len(cfg, S)), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["patches"] = _sds((B, cfg.num_patches, cfg.d_model), dtype)
+    if cfg.family == "encdec":
+        batch["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), dtype)
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, batch: Dict[str, Any],
+                 rules: AxisRules) -> Dict[str, P]:
+    out = {}
+    for k, v in batch.items():
+        names = ["batch"] + ["none"] * (len(v.shape) - 1)
+        out[k] = P(*[rules.resolve(n, d) for n, d in zip(names, v.shape)])
+    return out
+
+
+# =============================================================================
+# cache specs (decode / prefill)
+# =============================================================================
+def cache_shapes(cfg: ModelConfig, shape: ShapeConfig,
+                 dtype=jnp.bfloat16) -> Specs:
+    return jax.eval_shape(
+        lambda: api.init_cache(cfg, shape.global_batch, shape.seq_len, dtype))
+
+
+def cache_pspecs(cfg: ModelConfig, cache: Specs, rules: AxisRules) -> Specs:
+    """Name+rank dispatch over cache leaves.
+
+    k/v (…, B, S, KV, D): batch over data, *sequence over model* (seq-sharded
+    decode: partial softmax + small cross-shard reduction — flash-decoding
+    style; avoids any KV-head divisibility constraint).
+    ssm conv (…, B, W, C): channels over model.   ssm state (…, B, H, P, N):
+    heads over model.   rg-lru conv/state: width over model.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(cache)[0]
+    treedef = jax.tree_util.tree_structure(cache)
+    specs = []
+    for path, leaf in flat:
+        keys = [str(getattr(p, "key", getattr(p, "idx", p))) for p in path]
+        name = keys[-1]
+        nd = len(leaf.shape)
+        spec = [None] * nd
+        def fits(dim_idx, axis="model"):
+            return leaf.shape[dim_idx] % rules.mesh.shape.get(axis, 1) == 0
+        if name in ("k", "v", "xk", "xv"):
+            # (..., B, S, KV, D)
+            if fits(nd - 4, "data") and rules.resolve("batch"):
+                spec[nd - 4] = rules.resolve("batch", leaf.shape[nd - 4])
+            if fits(nd - 3):
+                spec[nd - 3] = "model"
+        elif name == "conv":
+            if fits(nd - 3, "data"):
+                spec[nd - 3] = rules.resolve("batch", leaf.shape[nd - 3])
+            if fits(nd - 1):
+                spec[nd - 1] = "model"
+        elif name == "state":
+            b_idx = 1 if nd >= 3 else 0
+            if fits(b_idx, "data"):
+                spec[b_idx] = rules.resolve("batch", leaf.shape[b_idx])
+            if fits(nd - 2 if nd >= 4 else nd - 1):
+                spec[nd - 2 if nd >= 4 else nd - 1] = "model"
+        specs.append(P(*spec))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig
+                  ) -> Tuple[Any, Any, Any]:
+    """(cache_specs, token_spec, pos_spec) for serve_step."""
+    B = shape.global_batch
+    return (cache_shapes(cfg, shape),
+            _sds((B, 1), jnp.int32),
+            _sds((), jnp.int32))
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                        dtype=jnp.bfloat16) -> Dict[str, Any]:
+    return train_batch_specs(cfg, shape, dtype)

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function, not a module-level constant, so importing this module never
+touches jax device state (required: smoke tests must see 1 CPU device while
+the dry-run process sets XLA_FLAGS for 512 host devices *before* jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (TPU v5e); 2 pods = 512 chips multi-pod.
+
+    The dry-run process forces 512 host devices; the single-pod mesh uses the
+    first 256 of them."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices, have {len(jax.devices())} — set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import (launch/dryrun.py does this)")
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
+def make_debug_mesh(data: int = 1, model: int = 1, pod: int = 0):
+    """Small mesh for tests running under --xla_force_host_platform_device_count
+    set by the test itself (never globally)."""
+    if pod:
+        return jax.make_mesh((pod, data, model), ("pod", "data", "model"))
+    return jax.make_mesh((data, model), ("data", "model"))

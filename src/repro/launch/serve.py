@@ -1,0 +1,70 @@
+"""Batched serving driver: prefill + decode loop with KV cache (CPU-runnable).
+
+    PYTHONPATH=src python -m repro.launch.serve --arch lm16m --batch 4 \\
+        --prompt-len 64 --gen 32
+
+Exercises the same prefill/decode_step paths the dry-run lowers at
+production scale, on a real (small) model with greedy sampling.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.lm_small import SMALL_CONFIGS
+from repro.data.synthetic import make_token_stream
+from repro.models import api
+from repro.models import transformer as T
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="lm16m", choices=list(SMALL_CONFIGS))
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    cfg = SMALL_CONFIGS[args.arch]
+    params = api.init(cfg, jax.random.PRNGKey(args.seed))
+    total = args.prompt_len + args.gen
+    stream = make_token_stream(args.batch * (args.prompt_len + 1) * 4,
+                               cfg.vocab_size, seed=args.seed)
+    prompts = stream[: args.batch * args.prompt_len].reshape(
+        args.batch, args.prompt_len).astype(np.int32)
+
+    decode = jax.jit(lambda p, c, t, pos: api.decode(cfg, p, c, t, pos),
+                     donate_argnums=(1,))
+
+    t0 = time.time()
+    # prefill allocates cache slots for the full prompt+generation length
+    logits, cache = api.prefill(cfg, params, {"tokens": jnp.asarray(prompts)},
+                                target_seq=total)
+    t_prefill = time.time() - t0
+
+    token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out_tokens = [np.asarray(token)]
+    t1 = time.time()
+    for i in range(args.gen - 1):
+        pos = jnp.int32(args.prompt_len + i)
+        logits, cache = decode(params, cache, token, pos)
+        token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out_tokens.append(np.asarray(token))
+    jax.block_until_ready(token)
+    t_decode = time.time() - t1
+
+    gen = np.concatenate(out_tokens, axis=1)
+    tok_s = args.batch * (args.gen - 1) / max(t_decode, 1e-9)
+    print(f"# {cfg.name}: prefill {args.batch}x{args.prompt_len} in "
+          f"{t_prefill:.2f}s; decode {args.gen-1} steps at {tok_s:.1f} tok/s")
+    print("# first sequence:", gen[0][:16].tolist())
+    return gen
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,156 @@
+"""Step builders: train / prefill / decode, plus the FedAdapt multi-pod
+local-SGD pair (local_step + fedavg sync_step).
+
+All functions are pure and jit-able; the dry-run lowers them with
+ShapeDtypeStruct inputs and explicit in/out shardings.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import api
+from repro.optim import Optimizer, make_optimizer
+from repro.parallel.sharding import AxisRules, param_pspecs
+
+Params = Any
+
+
+# =============================================================================
+# abstract shapes
+# =============================================================================
+def abstract_params(cfg: ModelConfig, dtype=jnp.bfloat16) -> Params:
+    return jax.eval_shape(
+        lambda: api.init(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def abstract_opt_state(opt: Optimizer, params_shapes: Params) -> Params:
+    return jax.eval_shape(opt.init, params_shapes)
+
+
+def opt_pspecs(opt_state_shapes: Params, params_shapes: Params,
+               param_specs: Params, rules: AxisRules) -> Params:
+    """Optimizer-state PartitionSpecs.
+
+    m/v/mom mirror the parameter specs; adafactor's factored stats drop the
+    reduced axis from the corresponding param spec (vr: last, vc: -2)."""
+    flat_params = {
+        "/".join(str(getattr(q, "key", getattr(q, "idx", q))) for q in path):
+        spec
+        for (path, _), spec in zip(
+            jax.tree_util.tree_flatten_with_path(params_shapes)[0],
+            jax.tree_util.tree_leaves(
+                param_specs, is_leaf=lambda x: isinstance(x, P)))
+    }
+
+    flat = jax.tree_util.tree_flatten_with_path(opt_state_shapes)[0]
+    treedef = jax.tree_util.tree_structure(opt_state_shapes)
+    specs = []
+    for path, leaf in flat:
+        keys = [str(getattr(q, "key", getattr(q, "idx", q))) for q in path]
+        if keys[-1] in ("vr", "vc"):
+            pkey = "/".join(keys[1:-1])   # strip leading 'stats' + trailing
+            base = flat_params.get(pkey, P(*([None] * (len(leaf.shape) + 1))))
+            parts = list(base) + [None] * (len(leaf.shape) + 1 - len(base))
+            drop = -1 if keys[-1] == "vr" else -2
+            del parts[drop]
+            specs.append(P(*parts[: len(leaf.shape)]))
+        elif keys[0] in ("m", "v", "mom"):
+            pkey = "/".join(keys[1:])
+            base = flat_params.get(pkey, P())
+            parts = list(base)[: len(leaf.shape)]
+            parts += [None] * (len(leaf.shape) - len(parts))
+            specs.append(P(*parts))
+        else:   # step, scalars
+            specs.append(P(*([None] * len(leaf.shape))))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def model_param_pspecs(cfg: ModelConfig, params_shapes: Params,
+                       rules: AxisRules) -> Params:
+    return param_pspecs(params_shapes, rules)
+
+
+def make_opt(cfg: ModelConfig) -> Optimizer:
+    return make_optimizer(cfg.optimizer)
+
+
+# =============================================================================
+# steps
+# =============================================================================
+def make_train_step(cfg: ModelConfig, opt: Optimizer, unroll: bool = False):
+    # ``unroll`` unrolls all model scans at trace time (cost-accounting
+    # lowering — see launch/dryrun.py); it is baked into the closure so the
+    # jit lowering cache never conflates the two variants.
+    from repro.models.layers import unroll_scans
+
+    def train_step(params, opt_state, batch):
+        with unroll_scans(unroll):
+            loss, grads = jax.value_and_grad(
+                lambda p: api.loss(cfg, p, batch))(params)
+        params, opt_state = opt.update(params, grads, opt_state)
+        return loss, params, opt_state
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, shape: ShapeConfig,
+                      unroll: bool = False):
+    from repro.models.layers import unroll_scans
+
+    def prefill_step(params, batch):
+        with unroll_scans(unroll):
+            return api.prefill(cfg, params, batch, target_seq=shape.seq_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, unroll: bool = False):
+    from repro.models.layers import unroll_scans
+
+    def serve_step(params, cache, token, pos):
+        with unroll_scans(unroll):
+            return api.decode(cfg, params, cache, token, pos)
+    return serve_step
+
+
+# =============================================================================
+# FedAdapt multi-pod pattern: per-pod local steps + infrequent FedAvg sync
+# =============================================================================
+def make_local_sync_steps(cfg: ModelConfig, opt: Optimizer, num_pods: int):
+    """Per-pod divergent replicas: every param/opt leaf gets a leading
+    (num_pods,) dim sharded over the 'pod' mesh axis; local_step vmaps the
+    train step over it (zero cross-pod collectives — XLA partitions the vmap
+    into independent per-pod programs), and sync_step is the only cross-pod
+    communication: a FedAvg mean over the pod dim every ``sync_every``
+    rounds.  This is the paper's FL structure mapped onto pods (DESIGN.md
+    §2) — cross-pod traffic drops from every-step gradient all-reduce to
+    2 x model_bytes / sync_every."""
+    base = make_train_step(cfg, opt)
+
+    def local_step(params_pods, opt_pods, batch):
+        return jax.vmap(base)(params_pods, opt_pods, batch)
+
+    def sync_step(params_pods):
+        mean = jax.tree_util.tree_map(
+            lambda x: jnp.mean(x.astype(jnp.float32), axis=0,
+                               keepdims=True).astype(x.dtype), params_pods)
+        return jax.tree_util.tree_map(
+            lambda m, x: jnp.broadcast_to(m, x.shape), mean, params_pods)
+
+    return local_step, sync_step
+
+
+def stack_for_pods(shapes: Params, num_pods: int) -> Params:
+    return jax.tree_util.tree_map(
+        lambda l: jax.ShapeDtypeStruct((num_pods,) + tuple(l.shape), l.dtype),
+        shapes)
+
+
+def pod_pspecs(specs: Params, num_pods: int) -> Params:
+    return jax.tree_util.tree_map(
+        lambda s: P(*(("pod",) + tuple(s))), specs,
+        is_leaf=lambda x: isinstance(x, P))

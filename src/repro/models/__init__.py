@@ -1,0 +1,1 @@
+from repro.models import api, layers, split, vgg  # noqa: F401

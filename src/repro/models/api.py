@@ -1,0 +1,59 @@
+"""Unified model API: every assigned architecture behind one interface.
+
+    mod = get_model(cfg)           # family dispatch
+    params = mod.init(cfg, key, dtype)
+    loss   = loss(cfg, params, batch)
+    logits, cache = prefill(cfg, params, batch)
+    logits, cache = decode(cfg, params, cache, token, pos)
+
+``batch`` keys: tokens, labels (+ patches for vlm, frames for encdec — the
+modality frontend stubs).
+"""
+from __future__ import annotations
+
+from types import ModuleType
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, hybrid, ssm, transformer
+
+_FAMILIES: Dict[str, ModuleType] = {
+    "dense": transformer,
+    "moe": transformer,
+    "vlm": transformer,
+    "ssm": ssm,
+    "hybrid": hybrid,
+    "encdec": encdec,
+}
+
+
+def get_model(cfg: ModelConfig) -> ModuleType:
+    try:
+        return _FAMILIES[cfg.family]
+    except KeyError:
+        raise KeyError(f"unknown family {cfg.family!r}") from None
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.float32):
+    return get_model(cfg).init(cfg, key, dtype)
+
+
+def loss(cfg: ModelConfig, params, batch) -> jnp.ndarray:
+    return get_model(cfg).loss_fn(cfg, params, batch)
+
+
+def prefill(cfg: ModelConfig, params, batch, target_seq=None):
+    mod = get_model(cfg)
+    extra = batch.get("frames") if cfg.family == "encdec" else batch.get("patches")
+    return mod.prefill(cfg, params, batch["tokens"], extra,
+                       target_seq=target_seq)
+
+
+def init_cache(cfg: ModelConfig, batch_size: int, seq_len: int, dtype):
+    return get_model(cfg).init_cache(cfg, batch_size, seq_len, dtype)
+
+
+def decode(cfg: ModelConfig, params, cache, token, pos):
+    return get_model(cfg).decode_step(cfg, params, cache, token, pos)

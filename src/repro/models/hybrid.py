@@ -1,0 +1,300 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local attention
+in a 1:2 pattern (R, R, L).  [arXiv:2402.19427]
+
+Layers with different param *structures* (recurrent vs attention) cannot share
+one stacked scan, so layers are grouped into super-blocks of
+``len(cfg.layer_pattern)`` (= 3) layers; ``lax.scan`` runs over the
+``num_layers // 3`` groups and the remainder layers (38 = 12*3 + 2) are
+applied explicitly.  Decode state is O(1) per recurrent layer (conv window +
+LRU state) and a 2048-slot rolling KV buffer per local-attention layer —
+which is why this arch runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import shard
+
+Params = Dict[str, jnp.ndarray]
+_LRU_C = 8.0
+
+
+# =============================================================================
+# RG-LRU
+# =============================================================================
+def init_rglru(key, cfg: ModelConfig, dtype) -> Params:
+    d = cfg.d_model
+    w = cfg.rglru.lru_width or d
+    ks = jax.random.split(key, 6)
+    # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+    lam = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / _LRU_C))   # inverse softplus
+    return {
+        "w_in1": L._dense_init(ks[1], d, w, dtype),
+        "w_in2": L._dense_init(ks[2], d, w, dtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.rglru.conv_width, w),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_r": L._dense_init(ks[4], w, w, dtype),
+        "w_i": L._dense_init(ks[5], w, w, dtype),
+        "lam": lam,
+        "w_lru_out": L._dense_init(ks[0], w, d, dtype),
+    }
+
+
+def _rglru_coeffs(p: Params, u: jnp.ndarray):
+    """u: conv output (..., w) -> (a, b) of  h_t = a_t h_{t-1} + b_t."""
+    r = jax.nn.sigmoid((u @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((u @ p["w_i"]).astype(jnp.float32))
+    log_a = -_LRU_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    gate = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-8))
+    b = gate * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(p: Params, u: jnp.ndarray) -> jnp.ndarray:
+    """Training path: associative scan over the sequence. u: (B, S, w)."""
+    a, b = _rglru_coeffs(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype)
+
+
+def rglru_step(p: Params, u: jnp.ndarray, h: jnp.ndarray
+               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode: u (B, 1, w), h (B, w) -> (out (B,1,w), new h)."""
+    a, b = _rglru_coeffs(p, u[:, 0])
+    new_h = a * h.astype(jnp.float32) + b
+    return new_h[:, None].astype(u.dtype), new_h.astype(u.dtype)
+
+
+def _causal_conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    W = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * w[i][None, None, :] for i in range(W))
+    return out + b[None, None, :]
+
+
+def recurrent_mix(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+                  cache: Optional[Params] = None):
+    """The Griffin recurrent block (gated branch ⊙ conv→RG-LRU branch)."""
+    gate = jax.nn.gelu(x @ p["w_in1"])
+    u = x @ p["w_in2"]
+    if cache is None:
+        u = _causal_conv(u, p["conv_w"], p["conv_b"])
+        h = rglru_scan(p, u)
+        out = (gate * h) @ p["w_lru_out"]
+        return out, None
+    window = jnp.concatenate([cache["conv"], u], axis=1)
+    conv_out = (jnp.einsum("bwc,wc->bc", window, p["conv_w"])
+                + p["conv_b"])[:, None]
+    h, new_state = rglru_step(p, conv_out, cache["state"])
+    out = (gate * h) @ p["w_lru_out"]
+    return out, {"conv": window[:, 1:], "state": new_state}
+
+
+# =============================================================================
+# layer init / apply (kind 'R' or 'L')
+# =============================================================================
+def init_block(cfg: ModelConfig, kind: str, key, dtype) -> Params:
+    k1, k2 = jax.random.split(key)
+    p: Params = {"ln1": L.init_rms_norm(cfg.d_model, dtype),
+                 "ln2": L.init_rms_norm(cfg.d_model, dtype)}
+    if kind == "R":
+        p["rglru"] = init_rglru(k1, cfg, dtype)
+    else:
+        p["attn"] = L.init_attention(k1, cfg, dtype)
+    p["ffn"] = L.init_ffn(k2, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def apply_block(cfg: ModelConfig, kind: str, p: Params, x: jnp.ndarray,
+                positions: jnp.ndarray, cache: Optional[Params] = None,
+                decode_pos=None, make_cache_len: int = 0):
+    """Returns (x, new_cache_or_None). make_cache_len>0 => prefill."""
+    h = L.rms_norm(x, p["ln1"])
+    new_cache = None
+    if kind == "R":
+        mix, new_cache = recurrent_mix(cfg, p["rglru"], h, cache)
+        if make_cache_len:   # prefill: reconstruct final conv window + state
+            u = h @ p["rglru"]["w_in2"]
+            W = cfg.rglru.conv_width
+            conv_in = u[:, u.shape[1] - (W - 1):, :]
+            uc = _causal_conv(u, p["rglru"]["conv_w"], p["rglru"]["conv_b"])
+            hfull = rglru_scan(p["rglru"], uc)
+            new_cache = {"conv": conv_in, "state": hfull[:, -1]}
+    else:
+        if cache is None and not make_cache_len:
+            mix, _ = L.attention_block(cfg, p["attn"], h, positions,
+                                       window=cfg.window)
+        elif make_cache_len:
+            mix, _ = L.attention_block(cfg, p["attn"], h, positions,
+                                       window=cfg.window)
+            B, S, _ = h.shape
+            CL = make_cache_len
+            k = (h @ p["attn"]["wk"]).reshape(B, S, cfg.num_kv_heads,
+                                              cfg.head_dim)
+            v = (h @ p["attn"]["wv"]).reshape(B, S, cfg.num_kv_heads,
+                                              cfg.head_dim)
+            k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
+            take = min(S, CL)
+            idx = jnp.arange(S - take, S) % CL
+            ck = jnp.zeros((B, CL, cfg.num_kv_heads, cfg.head_dim), h.dtype
+                           ).at[:, idx].set(k[:, S - take:])
+            cv = jnp.zeros_like(ck).at[:, idx].set(v[:, S - take:])
+            new_cache = {"k": ck, "v": cv}
+        else:
+            CL = cache["k"].shape[1]
+            mix, new_cache = L.attention_block(
+                cfg, p["attn"], h, positions, window=cfg.window,
+                kv_cache=cache, cache_len=CL, decode_pos=decode_pos)
+    x = x + mix
+    x = x + L.ffn(p["ffn"], L.rms_norm(x, p["ln2"]), cfg.mlp_act)
+    return shard(x, ("batch", "seq", "none")), new_cache
+
+
+# =============================================================================
+# model init
+# =============================================================================
+def _pattern_info(cfg: ModelConfig) -> Tuple[int, int]:
+    P = len(cfg.layer_pattern)
+    return cfg.num_layers // P, cfg.num_layers % P
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    n_groups, rem = _pattern_info(cfg)
+    k_embed, k_layers, k_rem = jax.random.split(key, 3)
+    slots: List[Params] = []
+    for s, kind in enumerate(cfg.layer_pattern):
+        keys = jax.random.split(jax.random.fold_in(k_layers, s), n_groups)
+        slots.append(jax.vmap(
+            lambda k, kind=kind: init_block(cfg, kind, k, dtype))(keys))
+    rem_params = [init_block(cfg, cfg.layer_pattern[i], jax.random.fold_in(k_rem, i), dtype)
+                  for i in range(rem)]
+    p: Params = {
+        "embed": L._embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": {"slots": slots},
+        "rem": rem_params,
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._dense_init(k_embed, cfg.d_model, cfg.vocab_size, dtype)
+    return p
+
+
+def unembed_matrix(cfg: ModelConfig, params: Params) -> jnp.ndarray:
+    return params["embed"].T if cfg.tie_embeddings else params["unembed"]
+
+
+# =============================================================================
+# forward / loss / serving
+# =============================================================================
+def _cache_len(cfg: ModelConfig, seq: int) -> int:
+    return min(seq, cfg.window) if cfg.window > 0 else seq
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            patches=None, return_cache: bool = False,
+            cache_seq: Optional[int] = None):
+    x = params["embed"][tokens] * math.sqrt(cfg.d_model)
+    x = shard(x.astype(params["embed"].dtype), ("batch", "seq", "none"))
+    S = tokens.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    CL = _cache_len(cfg, cache_seq or S) if return_cache else 0
+
+    def body(x, slot_params):
+        caches = []
+        for s, kind in enumerate(cfg.layer_pattern):
+            x, c = apply_block(cfg, kind, slot_params[s], x, positions,
+                               make_cache_len=CL)
+            caches.append(c)
+        return x, tuple(caches) if return_cache else None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = L.scan(body_fn, x, tuple(params["layers"]["slots"]))
+    rem_caches = []
+    for i, p in enumerate(params["rem"]):
+        x, c = apply_block(cfg, cfg.layer_pattern[i], p, x, positions,
+                           make_cache_len=CL)
+        rem_caches.append(c)
+    x = L.rms_norm(x, params["final_norm"])
+    if return_cache:
+        return x, {"slots": caches, "rem": rem_caches}
+    return x, None
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> jnp.ndarray:
+    hidden, _ = forward(cfg, params, batch["tokens"])
+    return L.chunked_ce_loss(hidden, unembed_matrix(cfg, params),
+                             batch["labels"], cfg.logit_softcap)
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype) -> Params:
+    n_groups, rem = _pattern_info(cfg)
+    CL = _cache_len(cfg, seq_len)
+    w = cfg.rglru.lru_width or cfg.d_model
+    W = cfg.rglru.conv_width
+
+    def one(kind: str, lead: Tuple[int, ...]):
+        if kind == "R":
+            return {"conv": jnp.zeros(lead + (batch, W - 1, w), dtype),
+                    "state": jnp.zeros(lead + (batch, w), dtype)}
+        kv = jnp.zeros(lead + (batch, CL, cfg.num_kv_heads, cfg.head_dim), dtype)
+        return {"k": kv, "v": jnp.zeros_like(kv)}
+
+    return {
+        "slots": tuple(one(k, (n_groups,)) for k in cfg.layer_pattern),
+        "rem": [one(cfg.layer_pattern[i], ()) for i in range(rem)],
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            patches=None, target_seq: Optional[int] = None):
+    hidden, cache = forward(cfg, params, tokens, return_cache=True,
+                            cache_seq=target_seq)
+    logits = (hidden[:, -1] @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jnp.ndarray, pos: jnp.ndarray):
+    x = params["embed"][token] * math.sqrt(cfg.d_model)
+    x = x.astype(params["embed"].dtype)
+    positions = pos[None] if pos.ndim == 0 else pos
+
+    def body(x, xs):
+        slot_params, slot_caches = xs
+        new_caches = []
+        for s, kind in enumerate(cfg.layer_pattern):
+            x, c = apply_block(cfg, kind, slot_params[s], x, positions,
+                               cache=slot_caches[s], decode_pos=pos)
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    x, new_slot_caches = L.scan(
+        body, x, (tuple(params["layers"]["slots"]), cache["slots"]))
+    new_rem = []
+    for i, p in enumerate(params["rem"]):
+        x, c = apply_block(cfg, cfg.layer_pattern[i], p, x, positions,
+                           cache=cache["rem"][i], decode_pos=pos)
+        new_rem.append(c)
+    x = L.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1] @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    return logits, {"slots": new_slot_caches, "rem": new_rem}

@@ -1,0 +1,101 @@
+"""Split-point (Offloading Point) execution for the LM model zoo.
+
+FedAdapt's core mechanism: run layers [0, op) on the *client slice*, ship the
+cut activation ("smashed data"), run layers [op, L) on the *server slice*.
+For scan-stacked transformer params the cut is a static slice of the stacked
+leaves, so both stages remain single ``lax.scan`` loops (compact HLO).
+
+``cut_bytes`` is the L(mu) term of Eq. 1; for LMs it is constant across OPs
+((B, S, d_model) at every boundary) — unlike the paper's VGGs where pooling
+shrinks it.  ``quantize=True`` routes the transfer through the int8
+smashed-data compressor (kernels/quant_transfer), the paper's future-work
+item.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _slice_layers(params: Params, start: int, stop: int) -> Params:
+    return jax.tree_util.tree_map(lambda a: a[start:stop], params["layers"])
+
+
+def num_boundaries(cfg: ModelConfig) -> int:
+    """OP candidates: after each layer, 0..num_layers (0 = everything on
+    server ... num_layers = device-native)."""
+    return cfg.num_layers + 1
+
+
+def prefix_forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                   op: int, patches: Optional[jnp.ndarray] = None
+                   ) -> jnp.ndarray:
+    """Client-side stage: embed + layers [0, op). Returns cut activations."""
+    x = T.embed_inputs(cfg, params, tokens, patches)
+    if op == 0:
+        return x
+    S = x.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = T.window_schedule(cfg)[:op]
+    sub = _slice_layers(params, 0, op)
+
+    def body(x, xs):
+        p, w = xs
+        return T._block(cfg, p, x, positions, w), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = L.scan(body_fn, x, (sub, windows))
+    return x
+
+
+def suffix_forward(cfg: ModelConfig, params: Params, acts: jnp.ndarray,
+                   op: int) -> jnp.ndarray:
+    """Server-side stage: layers [op, L) + final norm. Returns hidden."""
+    S = acts.shape[1]
+    positions = jnp.arange(S, dtype=jnp.int32)
+    x = acts
+    if op < cfg.num_layers:
+        windows = T.window_schedule(cfg)[op:]
+        sub = _slice_layers(params, op, cfg.num_layers)
+
+        def body(x, xs):
+            p, w = xs
+            return T._block(cfg, p, x, positions, w), None
+
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = L.scan(body_fn, x, (sub, windows))
+    return L.rms_norm(x, params["final_norm"])
+
+
+def split_loss(cfg: ModelConfig, params: Params, batch, op: int,
+               quantize: bool = False) -> jnp.ndarray:
+    """End-to-end loss through the cut (differentiable through the transfer)."""
+    acts = prefix_forward(cfg, params, batch["tokens"], op,
+                          batch.get("patches"))
+    if quantize:
+        from repro.kernels.quant_transfer import ops as qops
+        acts = qops.fake_quant_int8(acts)   # straight-through int8 transfer
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        pad = -jnp.ones((labels.shape[0], cfg.num_patches), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    hidden = suffix_forward(cfg, params, acts, op)
+    return L.chunked_ce_loss(hidden, T.unembed_matrix(cfg, params), labels,
+                             cfg.logit_softcap)
+
+
+def cut_bytes(cfg: ModelConfig, batch: int, seq: int,
+              bytes_per_el: int = 2, quantize: bool = False) -> float:
+    """L(mu): activation bytes crossing the cut, one way, per step.
+    Backward sends the same-shaped gradient back (caller doubles)."""
+    per = 1 if quantize else bytes_per_el
+    return float(batch * seq * cfg.d_model * per)

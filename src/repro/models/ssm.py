@@ -1,0 +1,291 @@
+"""Mamba-2 (SSD — state-space duality) LM. [arXiv:2405.21060]
+
+Attention-free: each block is  norm -> in_proj -> causal depthwise conv ->
+SSD sequence mixing -> gated norm -> out_proj.  Training uses the *chunked*
+SSD algorithm (intra-chunk dense matmuls that map onto the MXU + an
+inter-chunk state recurrence); this jnp implementation is also the oracle for
+``repro.kernels.ssd_scan``.  Decode carries an O(1) recurrent state — this is
+why mamba2 runs the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import shard
+
+Params = Dict[str, jnp.ndarray]
+
+
+def dims(cfg: ModelConfig) -> Tuple[int, int, int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nheads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.state_dim
+    proj_dim = 2 * d_inner + 2 * s.state_dim + nheads   # z, x, B, C, dt
+    return d_inner, nheads, conv_dim, proj_dim, s.state_dim
+
+
+# =============================================================================
+# init
+# =============================================================================
+def init_layer(cfg: ModelConfig, key, dtype) -> Params:
+    d_inner, nheads, conv_dim, proj_dim, N = dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = jnp.exp(jax.random.uniform(k3, (nheads,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    return {
+        "ln": L.init_rms_norm(cfg.d_model, dtype),
+        "in_proj": L._dense_init(k1, cfg.d_model, proj_dim, dtype),
+        "conv_w": (jax.random.normal(k2, (cfg.ssm.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nheads)).astype(jnp.float32),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": (dt + jnp.log(-jnp.expm1(-dt))).astype(jnp.float32),
+        "gate_ln": L.init_rms_norm(d_inner, dtype),
+        "out_proj": L._dense_init(k4, d_inner, cfg.d_model, dtype),
+    }
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    k_embed, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    p: Params = {
+        "embed": L._embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+        "unembed": L._dense_init(k_out, cfg.d_model, cfg.vocab_size, dtype),
+    }
+    return p
+
+
+# =============================================================================
+# SSD core — chunked dual form (oracle for kernels/ssd_scan)
+# =============================================================================
+def ssd_chunked(
+    x: jnp.ndarray,       # (B, S, H, P)
+    dt: jnp.ndarray,      # (B, S, H)  — post-softplus
+    A: jnp.ndarray,       # (H,)       — negative
+    Bm: jnp.ndarray,      # (B, S, N)
+    Cm: jnp.ndarray,      # (B, S, N)
+    chunk: int,
+    init_state: Optional[jnp.ndarray] = None,  # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:
+        # pad to a chunk multiple with dt=0 rows (identity decay, no state
+        # contribution); outputs for the padding are sliced off below.
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xc = x.reshape(Bsz, nc, Q, H, P)
+    dtc = dt.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+
+    dtA = dtc * A[None, None, None, :]                    # (B,nc,Q,H)
+    cum = jnp.cumsum(dtA, axis=2)                         # within-chunk cumsum
+
+    # --- intra-chunk (dense, MXU-friendly) -----------------------------------
+    scores = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)        # (B,nc,Q,Q)
+    li = cum[:, :, :, None, :]                            # (B,nc,Q,1,H)
+    lj = cum[:, :, None, :, :]                            # (B,nc,1,Q,H)
+    decay = jnp.exp(li - lj)                              # (B,nc,Q,Q,H)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    M = scores[..., None] * jnp.where(causal, decay, 0.0) \
+        * dtc[:, :, None, :, :]                           # (B,nc,i,j,H)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", M.astype(x.dtype), xc)
+
+    # --- chunk states + inter-chunk recurrence -------------------------------
+    seg_end = jnp.exp(cum[:, :, -1:, :] - cum) * dtc      # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchpn",
+                        seg_end.astype(x.dtype), Bc, xc)  # (B,nc,H,P,N)
+    gamma = jnp.exp(jnp.sum(dtA, axis=2))                 # (B,nc,H)
+
+    def step(s_prev, xs):
+        st, g = xs                                        # (B,H,P,N), (B,H)
+        s_new = g[..., None, None].astype(st.dtype) * s_prev + st
+        return s_new, s_prev                              # emit state *entering* chunk
+
+    s0 = init_state if init_state is not None else jnp.zeros(
+        (Bsz, H, P, N), x.dtype)
+    final_state, entering = L.scan(
+        step, s0,
+        (states.swapaxes(0, 1), gamma.swapaxes(0, 1)))    # scan over nc
+    entering = entering.swapaxes(0, 1)                    # (B,nc,H,P,N)
+
+    y_inter = jnp.einsum("bcih,bcin,bchpn->bcihp",
+                         jnp.exp(cum).astype(x.dtype), Cc, entering)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)[:, :S_orig]
+    return y, final_state
+
+
+def ssd_decode_step(
+    x: jnp.ndarray,       # (B, H, P)
+    dt: jnp.ndarray,      # (B, H)
+    A: jnp.ndarray,       # (H,)
+    Bm: jnp.ndarray,      # (B, N)
+    Cm: jnp.ndarray,      # (B, N)
+    state: jnp.ndarray,   # (B, H, P, N)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    dtA = (dt * A[None, :]).astype(jnp.float32)
+    decay = jnp.exp(dtA)[..., None, None].astype(state.dtype)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt.astype(x.dtype), Bm, x)
+    new_state = decay * state + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm, new_state)
+    return y, new_state
+
+
+# =============================================================================
+# block
+# =============================================================================
+def _split_proj(cfg: ModelConfig, proj: jnp.ndarray):
+    d_inner, nheads, conv_dim, _, N = dims(cfg)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + conv_dim]
+    dt = proj[..., d_inner + conv_dim:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over (B, S, C) with kernel (W, C)."""
+    W = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1]] * w[i][None, None, :]
+              for i in range(W))
+    return out + b[None, None, :]
+
+
+def block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+          conv_state: Optional[jnp.ndarray] = None,
+          ssm_state: Optional[jnp.ndarray] = None):
+    """(B,S,d) -> (B,S,d). Decode mode when states are given (S==1)."""
+    d_inner, nheads, conv_dim, _, N = dims(cfg)
+    Bsz, S, _ = x.shape
+    h = L.rms_norm(x, p["ln"])
+    proj = h @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, proj)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+
+    if conv_state is None:
+        xbc = jax.nn.silu(_causal_conv(xbc, p["conv_w"], p["conv_b"]))
+        new_conv = None
+    else:
+        window = jnp.concatenate([conv_state, xbc], axis=1)   # (B, W, C)
+        out = jnp.einsum("bwc,wc->bc", window, p["conv_w"]) + p["conv_b"]
+        xbc = jax.nn.silu(out)[:, None, :]
+        new_conv = window[:, 1:]
+
+    xin = xbc[..., :d_inner].reshape(Bsz, S, nheads, cfg.ssm.head_dim)
+    Bm = xbc[..., d_inner:d_inner + N]
+    Cm = xbc[..., d_inner + N:]
+
+    if ssm_state is None:
+        y, _ = ssd_chunked(xin, dt, A, Bm, Cm, cfg.ssm.chunk)
+        new_ssm = None
+    else:
+        y, new_ssm = ssd_decode_step(
+            xin[:, 0], dt[:, 0], A, Bm[:, 0], Cm[:, 0], ssm_state)
+        y = y[:, None]
+
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * xin
+    y = y.reshape(Bsz, S, d_inner)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_ln"])
+    out = x + y @ p["out_proj"]
+    out = shard(out, ("batch", "seq", "none"))
+    if conv_state is None:
+        return out
+    return out, new_conv, new_ssm
+
+
+# =============================================================================
+# model API (mirrors transformer.py)
+# =============================================================================
+def forward(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            patches=None, return_cache: bool = False,
+            cache_seq: Optional[int] = None):
+    x = shard(params["embed"][tokens], ("batch", "seq", "none"))
+    d_inner, nheads, conv_dim, _, N = dims(cfg)
+    Bsz, S = tokens.shape
+
+    def body(x, p):
+        if not return_cache:
+            return block(cfg, p, x), None
+        # prefill: also produce the final conv window + ssm state
+        h = L.rms_norm(x, p["ln"])
+        proj = h @ p["in_proj"]
+        z, xbc_raw, dt = _split_proj(cfg, proj)
+        dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        xbc = jax.nn.silu(_causal_conv(xbc_raw, p["conv_w"], p["conv_b"]))
+        xin = xbc[..., :d_inner].reshape(Bsz, S, nheads, cfg.ssm.head_dim)
+        Bm = xbc[..., d_inner:d_inner + N]
+        Cm = xbc[..., d_inner + N:]
+        y, fin_state = ssd_chunked(xin, dt, A, Bm, Cm, cfg.ssm.chunk)
+        y = y + p["D"][None, None, :, None].astype(y.dtype) * xin
+        y = L.rms_norm(y.reshape(Bsz, S, d_inner) * jax.nn.silu(z), p["gate_ln"])
+        out = x + y @ p["out_proj"]
+        W = cfg.ssm.conv_width
+        conv_cache = xbc_raw[:, S - (W - 1):, :]
+        return out, {"conv": conv_cache, "state": fin_state}
+
+    block_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = L.scan(block_fn, x, params["layers"])
+    return L.rms_norm(x, params["final_norm"]), caches
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> jnp.ndarray:
+    hidden, _ = forward(cfg, params, batch["tokens"])
+    return L.chunked_ce_loss(hidden, params["unembed"], batch["labels"])
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype) -> Params:
+    d_inner, nheads, conv_dim, _, N = dims(cfg)
+    Lr = cfg.num_layers
+    W = cfg.ssm.conv_width
+    return {
+        "conv": jnp.zeros((Lr, batch, W - 1, conv_dim), dtype),
+        "state": jnp.zeros((Lr, batch, nheads, cfg.ssm.head_dim, N), dtype),
+    }
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            patches=None, target_seq: Optional[int] = None):
+    hidden, cache = forward(cfg, params, tokens, return_cache=True)
+    logits = (hidden[:, -1] @ params["unembed"]).astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jnp.ndarray, pos: jnp.ndarray):
+    x = params["embed"][token]
+
+    def body(x, xs):
+        p, conv_s, ssm_s = xs
+        out, new_conv, new_ssm = block(cfg, p, x, conv_s, ssm_s)
+        return out, (new_conv, new_ssm)
+
+    x, (nc, ns) = L.scan(body, x, (params["layers"],
+                                     cache["conv"], cache["state"]))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1] @ params["unembed"]).astype(jnp.float32)
+    return logits, {"conv": nc, "state": ns}

@@ -1,0 +1,255 @@
+"""Decoder-only transformer LM covering the dense / MoE / VLM assigned archs.
+
+One implementation serves mixtral-8x22b, arctic-480b, qwen3-0.6b, llama3-8b,
+minicpm-2b, gemma2-2b and internvl2-2b (the LM backbone of the VLM):
+
+* layers are stacked on a leading axis and executed with ``lax.scan``
+  (compact HLO; essential for compiling 56-layer models on the 512-device
+  dry-run mesh);
+* local/global attention patterns (gemma2, mixtral-SWA) are expressed as a
+  per-layer scanned ``window`` array, so all layers share one param structure;
+* each block body is ``jax.checkpoint``-ed (activation remat) when
+  ``cfg.remat``;
+* decode uses a single KV-cache buffer per layer whose length is
+  ``min(seq, window)`` when *every* layer is windowed (rolling buffer —
+  mixtral long_500k holds a 4096-slot cache), else the full sequence.
+
+The VLM variant prepends precomputed patch embeddings (frontend stub) to the
+token embeddings; labels for patch positions are ignored by the loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.parallel.sharding import shard
+
+Params = Dict[str, jnp.ndarray]
+
+
+# =============================================================================
+# init
+# =============================================================================
+def init_layer(cfg: ModelConfig, key, dtype) -> Params:
+    k_attn, k_ffn = jax.random.split(key)
+    p: Params = {
+        "ln1": L.init_rms_norm(cfg.d_model, dtype),
+        "ln2": L.init_rms_norm(cfg.d_model, dtype),
+        "attn": L.init_attention(k_attn, cfg, dtype),
+    }
+    if cfg.post_block_norm:
+        p["ln1_post"] = L.init_rms_norm(cfg.d_model, dtype)
+        p["ln2_post"] = L.init_rms_norm(cfg.d_model, dtype)
+    if cfg.moe is not None:
+        p["moe"] = L.init_moe(k_ffn, cfg, dtype)
+    else:
+        p["ffn"] = L.init_ffn(k_ffn, cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype)
+    return p
+
+
+def init(cfg: ModelConfig, key, dtype=jnp.float32) -> Params:
+    k_embed, k_layers, k_out = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k_layers, cfg.num_layers)
+    stacked = jax.vmap(lambda k: init_layer(cfg, k, dtype))(layer_keys)
+    p: Params = {
+        "embed": L._embed_init(k_embed, cfg.vocab_size, cfg.d_model, dtype),
+        "layers": stacked,
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = L._dense_init(k_out, cfg.d_model, cfg.vocab_size, dtype)
+    if cfg.family == "vlm":
+        p["patch_proj"] = L._dense_init(k_out, cfg.d_model, cfg.d_model, dtype)
+    return p
+
+
+def window_schedule(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer window sizes (0 = global), from cfg.layer_pattern."""
+    wins = [cfg.window if cfg.layer_kind(i) == "L" else 0
+            for i in range(cfg.num_layers)]
+    return jnp.asarray(wins, jnp.int32)
+
+
+def cache_len(cfg: ModelConfig, seq_len: int) -> int:
+    """Uniform per-layer KV-cache length for decode."""
+    if cfg.window > 0 and all(
+        cfg.layer_kind(i) == "L" for i in range(cfg.num_layers)
+    ):
+        return min(seq_len, cfg.window)   # rolling buffer (mixtral)
+    return seq_len
+
+
+def unembed_matrix(cfg: ModelConfig, params: Params) -> jnp.ndarray:
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+# =============================================================================
+# forward
+# =============================================================================
+def _block(cfg: ModelConfig, p: Params, x: jnp.ndarray,
+           positions: jnp.ndarray, window) -> jnp.ndarray:
+    h = L.rms_norm(x, p["ln1"])
+    attn_out, _ = L.attention_block(cfg, p["attn"], h, positions, window=window)
+    if cfg.post_block_norm:
+        attn_out = L.rms_norm(attn_out, p["ln1_post"])
+    # pin the TP reduction point on the bf16 projection output: without this
+    # XLA sinks the all-reduce past the residual add into the following
+    # rms_norm's f32 region, doubling the reduction bytes (§Perf iteration 1)
+    attn_out = shard(attn_out, ("batch", "seq", "none"))
+    x = x + attn_out
+    h = L.rms_norm(x, p["ln2"])
+    if cfg.moe is not None:
+        ff = L.moe_block(cfg, p["moe"], h)
+    else:
+        ff = L.ffn(p["ffn"], h, cfg.mlp_act)
+    if cfg.post_block_norm:
+        ff = L.rms_norm(ff, p["ln2_post"])
+    ff = shard(ff, ("batch", "seq", "none"))
+    x = x + ff
+    return shard(x, ("batch", "seq", "none"))
+
+
+def embed_inputs(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+                 patches: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    x = params["embed"][tokens]
+    if cfg.post_block_norm:          # gemma-style embedding scale
+        x = x * math.sqrt(cfg.d_model)
+    if cfg.family == "vlm":
+        assert patches is not None, "vlm arch needs precomputed patch embeds"
+        px = patches.astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([px, x], axis=1)
+    return shard(x, ("batch", "seq", "none"))
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens: jnp.ndarray,                     # (B, S_text)
+    patches: Optional[jnp.ndarray] = None,   # (B, P, d) vlm stub
+    return_cache: bool = False,
+    cache_seq: Optional[int] = None,         # cache buffer length for prefill
+) -> Tuple[jnp.ndarray, Optional[Params]]:
+    """Full-sequence forward. Returns (hidden, optional kv cache)."""
+    x = embed_inputs(cfg, params, tokens, patches)
+    B, S, _ = x.shape
+    positions = jnp.arange(S, dtype=jnp.int32)
+    windows = window_schedule(cfg)
+    CL = cache_len(cfg, cache_seq or S) if return_cache else 0
+
+    def body(x, xs):
+        p, window = xs
+        y = _block(cfg, p, x, positions, window)
+        if return_cache:
+            # recompute k/v for the cache (cheap vs keeping them through scan)
+            h = L.rms_norm(x, p["ln1"])
+            k = (h @ p["attn"]["wk"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+            v = (h @ p["attn"]["wv"]).reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+            if cfg.qk_norm:
+                k = L.rms_norm(k, p["attn"]["k_norm"])
+            k = L.apply_rope(k, positions[None, :], cfg.rope_theta)
+            ck = jnp.zeros((B, CL, cfg.num_kv_heads, cfg.head_dim), x.dtype)
+            cv = jnp.zeros_like(ck)
+            take = min(S, CL)
+            idx = (jnp.arange(S - take, S)) % CL
+            ck = ck.at[:, idx].set(k[:, S - take:])
+            cv = cv.at[:, idx].set(v[:, S - take:])
+            cache = {"k": shard(ck, ("batch", "none", "cache_seq", "none")),
+                     "v": shard(cv, ("batch", "none", "cache_seq", "none"))}
+            return y, cache
+        return y, None
+
+    block_fn = jax.checkpoint(body) if cfg.remat else body
+    x, caches = L.scan(block_fn, x, (params["layers"], windows))
+    x = L.rms_norm(x, params["final_norm"])
+    return x, caches
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: Dict[str, jnp.ndarray]
+            ) -> jnp.ndarray:
+    hidden, _ = forward(cfg, params, batch["tokens"], batch.get("patches"))
+    labels = batch["labels"]
+    if cfg.family == "vlm":   # patch positions carry no labels
+        pad = -jnp.ones((labels.shape[0], cfg.num_patches), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    loss = L.chunked_ce_loss(
+        hidden, unembed_matrix(cfg, params), labels, cfg.logit_softcap
+    )
+    if cfg.moe is not None:
+        # aux load-balancing loss on the first layer's router as a
+        # representative (full per-layer aux is accumulated in the scan of
+        # forward() only when training MoE for real — see fl/loop.py).
+        first = jax.tree_util.tree_map(lambda a: a[0], params["layers"])
+        h0 = embed_inputs(cfg, params, batch["tokens"], batch.get("patches"))
+        loss = loss + 0.01 * L.moe_aux_loss(cfg, first["moe"], h0)
+    return loss
+
+
+# =============================================================================
+# serving: prefill + decode
+# =============================================================================
+def prefill(cfg: ModelConfig, params: Params, tokens: jnp.ndarray,
+            patches: Optional[jnp.ndarray] = None,
+            target_seq: Optional[int] = None
+            ) -> Tuple[jnp.ndarray, Params]:
+    """Process the prompt; returns (last-token logits, kv cache)."""
+    hidden, cache = forward(cfg, params, tokens, patches,
+                            return_cache=True, cache_seq=target_seq)
+    logits = (hidden[:, -1] @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype) -> Params:
+    CL = cache_len(cfg, seq_len)
+    kv = jnp.zeros((cfg.num_layers, batch, CL, cfg.num_kv_heads, cfg.head_dim),
+                   dtype)
+    return {"k": kv, "v": jnp.zeros_like(kv)}
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jnp.ndarray,       # (B, 1) int32
+                pos: jnp.ndarray,         # scalar int32 — current position
+                ) -> Tuple[jnp.ndarray, Params]:
+    """One decode step; cache buffers are donated by the launcher."""
+    x = params["embed"][token]
+    if cfg.post_block_norm:
+        x = x * math.sqrt(cfg.d_model)
+    positions = pos[None] if pos.ndim == 0 else pos
+    windows = window_schedule(cfg)
+    CL = cache["k"].shape[2]
+
+    def body(x, xs):
+        p, window, ck, cv = xs
+        h = L.rms_norm(x, p["ln1"])
+        attn_out, new_kv = L.attention_block(
+            cfg, p["attn"], h, positions, window=window,
+            kv_cache={"k": ck, "v": cv}, cache_len=CL, decode_pos=pos,
+        )
+        if cfg.post_block_norm:
+            attn_out = L.rms_norm(attn_out, p["ln1_post"])
+        x = x + attn_out
+        h = L.rms_norm(x, p["ln2"])
+        if cfg.moe is not None:
+            ff = L.moe_block(cfg, p["moe"], h)
+        else:
+            ff = L.ffn(p["ffn"], h, cfg.mlp_act)
+        if cfg.post_block_norm:
+            ff = L.rms_norm(ff, p["ln2_post"])
+        return x + ff, (new_kv["k"], new_kv["v"])
+
+    x, (nk, nv) = L.scan(body, x, (params["layers"], windows,
+                                     cache["k"], cache["v"]))
+    x = L.rms_norm(x, params["final_norm"])
+    logits = (x[:, -1] @ unembed_matrix(cfg, params)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        logits = L.softcap(logits, cfg.logit_softcap)
+    return logits, {"k": nk, "v": nv}

@@ -1,0 +1,174 @@
+"""The paper's VGG-5 / VGG-8 models (Table IV) with split execution at OPs.
+
+CIFAR-10 inputs (B, 32, 32, 3) NHWC.  ``apply_range`` runs layers
+[start, stop) so the FedAdapt offloading point can cut the network anywhere:
+the device executes [0, op), ships the activation ("smashed data"), and the
+server executes [op, L).  ``layer_flops`` / ``activation_bytes`` feed the
+Eq. 1 cost model.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.vgg import VGGConfig
+
+Params = List[Dict[str, jnp.ndarray]]
+
+
+def _layer_shapes(cfg: VGGConfig) -> List[Tuple[int, int, int]]:
+    """(H, W, C) *after* each layer (FC layers: (1, 1, units))."""
+    h = w = cfg.input_hw
+    c = cfg.input_ch
+    out = []
+    for spec in cfg.layers:
+        if spec.startswith("C"):
+            c = int(spec[1:])
+        elif spec == "MP":
+            h //= 2
+            w //= 2
+        else:  # FC
+            h = w = 1
+            c = int(spec[2:])
+        out.append((h, w, c))
+    return out
+
+
+def init(cfg: VGGConfig, key, dtype=jnp.float32) -> Params:
+    params: Params = []
+    shapes = _layer_shapes(cfg)
+    in_c = cfg.input_ch
+    in_feat = None
+    for i, spec in enumerate(cfg.layers):
+        key, sub = jax.random.split(key)
+        if spec.startswith("C"):
+            out_c = int(spec[1:])
+            scale = 1.0 / math.sqrt(9 * in_c)
+            params.append({
+                "w": (jax.random.normal(sub, (3, 3, in_c, out_c), jnp.float32)
+                      * scale).astype(dtype),
+                "b": jnp.zeros((out_c,), dtype),
+                "bn_scale": jnp.ones((out_c,), dtype),
+                "bn_bias": jnp.zeros((out_c,), dtype),
+            })
+            in_c = out_c
+        elif spec == "MP":
+            params.append({})
+        else:
+            units = int(spec[2:])
+            if in_feat is None:
+                ph, pw, pc = shapes[i - 1]
+                in_feat = ph * pw * pc
+            scale = 1.0 / math.sqrt(in_feat)
+            params.append({
+                "w": (jax.random.normal(sub, (in_feat, units), jnp.float32)
+                      * scale).astype(dtype),
+                "b": jnp.zeros((units,), dtype),
+            })
+            in_feat = units
+    return params
+
+
+def _batch_norm(x: jnp.ndarray, scale, bias, eps=1e-5) -> jnp.ndarray:
+    mean = jnp.mean(x, axis=(0, 1, 2), keepdims=True)
+    var = jnp.var(x, axis=(0, 1, 2), keepdims=True)
+    return (x - mean) * lax.rsqrt(var + eps) * scale + bias
+
+
+def apply_range(cfg: VGGConfig, params: Params, x: jnp.ndarray,
+                start: int, stop: int) -> jnp.ndarray:
+    """Run layers [start, stop). x is the input / cut activation."""
+    for i in range(start, stop):
+        spec = cfg.layers[i]
+        p = params[i]
+        if spec.startswith("C"):
+            x = lax.conv_general_dilated(
+                x, p["w"], window_strides=(1, 1), padding="SAME",
+                dimension_numbers=("NHWC", "HWIO", "NHWC"))
+            x = _batch_norm(x + p["b"], p["bn_scale"], p["bn_bias"])
+            x = jax.nn.relu(x)
+        elif spec == "MP":
+            x = lax.reduce_window(x, -jnp.inf, lax.max, (1, 2, 2, 1),
+                                  (1, 2, 2, 1), "VALID")
+        else:
+            if x.ndim == 4:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ p["w"] + p["b"]
+            if i < len(cfg.layers) - 1:
+                x = jax.nn.relu(x)
+    return x
+
+
+def forward(cfg: VGGConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return apply_range(cfg, params, x, 0, len(cfg.layers))
+
+
+def loss_fn(cfg: VGGConfig, params: Params, batch) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["images"]).astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+def accuracy(cfg: VGGConfig, params: Params, batch) -> jnp.ndarray:
+    logits = forward(cfg, params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+
+
+def split_loss(cfg: VGGConfig, params: Params, batch, op_layer: int):
+    """Loss computed through an explicit cut (prefix -> cut -> suffix)."""
+    acts = apply_range(cfg, params, batch["images"], 0, op_layer)
+    logits = apply_range(cfg, params, acts, op_layer, len(cfg.layers))
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - gold)
+
+
+# =============================================================================
+# cost-model hooks (per-sample)
+# =============================================================================
+def layer_flops(cfg: VGGConfig) -> List[float]:
+    """Forward FLOPs per layer per sample (backward ≈ 2x, applied by caller)."""
+    shapes = _layer_shapes(cfg)
+    in_c = cfg.input_ch
+    in_hw = cfg.input_hw
+    flops = []
+    in_feat = None
+    for i, spec in enumerate(cfg.layers):
+        h, w, c = shapes[i]
+        if spec.startswith("C"):
+            flops.append(2.0 * h * w * c * in_c * 9)
+            in_c = c
+        elif spec == "MP":
+            flops.append(float(h * w * c * 4))
+            in_hw = h
+        else:
+            if in_feat is None:
+                ph, pw, pc = shapes[i - 1]
+                in_feat = ph * pw * pc
+            flops.append(2.0 * in_feat * c)
+            in_feat = c
+    return flops
+
+
+def activation_bytes(cfg: VGGConfig, layer_idx: int, bytes_per_el: int = 4
+                     ) -> float:
+    """Bytes of the activation *after* layer_idx, per sample (the smashed
+    data crossing the cut; gradients on the way back double it — caller)."""
+    h, w, c = _layer_shapes(cfg)[layer_idx]
+    return float(h * w * c * bytes_per_el)
+
+
+def op_flops_fraction(cfg: VGGConfig) -> List[float]:
+    """Fraction of total fwd FLOPs on the device for each OP (paper: VGG-5
+    -> 0.1, 0.66, 0.94, 1.0)."""
+    fl = layer_flops(cfg)
+    total = sum(fl)
+    return [sum(fl[:op]) / total for op in cfg.ops]

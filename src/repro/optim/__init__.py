@@ -1,0 +1,14 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer,
+    adafactor,
+    adamw,
+    make_optimizer,
+    sgd,
+)
+from repro.optim.schedule import (  # noqa: F401
+    constant,
+    cosine,
+    linear_warmup,
+    step_decay,
+    wsd,
+)

@@ -1,0 +1,198 @@
+"""Optimizers in pure JAX (optax is not installed in this container).
+
+API (optax-like, functional):
+
+    opt = make_optimizer("adamw", schedule=cosine(3e-4, 1000))
+    state = opt.init(params)
+    params, state = opt.update(params, grads, state)
+
+* ``sgd``       — SGD + momentum (the paper trains VGG with SGD).
+* ``adamw``     — decoupled weight decay.
+* ``adafactor`` — factored second moments for >=2-D leaves; chosen for
+  arctic-480b where AdamW state would not fit 16 GB/chip (DESIGN.md §6).
+
+Optimizer state mirrors the parameter pytree, so the sharding rules in
+``parallel/sharding.py`` apply to it unchanged (factored stats drop the
+reduced axis from the spec via ``param_pspecs`` on their actual shapes).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.schedule import constant
+
+Params = Any
+State = Dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Params], State]
+    update: Callable[[Params, Params, State], Tuple[Params, State]]
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+# =============================================================================
+def sgd(schedule=None, momentum: float = 0.9, weight_decay: float = 0.0,
+        clip_norm: float = 0.0) -> Optimizer:
+    schedule = schedule or constant(0.01)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mom": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(params, grads, state):
+        if clip_norm > 0:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        lr = schedule(state["step"])
+
+        def upd(p, g, m):
+            g32 = g.astype(jnp.float32)
+            if weight_decay:
+                g32 = g32 + weight_decay * p.astype(jnp.float32)
+            m_new = momentum * m + g32
+            return (p.astype(jnp.float32) - lr * m_new).astype(p.dtype), m_new
+
+        flat = jax.tree_util.tree_map(upd, params, grads, state["mom"])
+        new_params = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                            is_leaf=lambda t: isinstance(t, tuple))
+        new_mom = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                         is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"step": state["step"] + 1, "mom": new_mom}
+
+    return Optimizer("sgd", init, update)
+
+
+# =============================================================================
+def adamw(schedule=None, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          clip_norm: float = 1.0) -> Optimizer:
+    schedule = schedule or constant(1e-4)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+        }
+
+    def update(params, grads, state):
+        if clip_norm > 0:
+            grads, _ = clip_by_global_norm(grads, clip_norm)
+        step = state["step"] + 1
+        lr = schedule(state["step"])
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m_new = b1 * m + (1 - b1) * g32
+            v_new = b2 * v + (1 - b2) * jnp.square(g32)
+            mhat = m_new / bc1
+            vhat = v_new / bc2
+            delta = lr * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p.astype(jnp.float32))
+            return (p.astype(jnp.float32) - delta).astype(p.dtype), m_new, v_new
+
+        out = jax.tree_util.tree_map(upd, params, grads, state["m"], state["v"])
+        pick = lambda i: jax.tree_util.tree_map(  # noqa: E731
+            lambda t: t[i], out, is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"step": step, "m": pick(1), "v": pick(2)}
+
+    return Optimizer("adamw", init, update)
+
+
+# =============================================================================
+def adafactor(schedule=None, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, min_dim_factored: int = 2,
+              weight_decay: float = 0.0) -> Optimizer:
+    """Memory-factored second-moment optimizer (Shazeer & Stern, 2018).
+
+    >=2-D leaves keep only row/col second-moment vectors over the last two
+    axes (leading stacked-layer axes are preserved), cutting optimizer state
+    from 8 bytes/param (AdamW) to ~0 — the difference between arctic-480b
+    fitting in 16 GB/chip or not.
+    """
+    schedule = schedule or constant(1e-2)
+
+    def _factored(p):
+        return p.ndim >= min_dim_factored
+
+    def init(params):
+        def stat(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "stats": jax.tree_util.tree_map(stat, params),
+        }
+
+    def update(params, grads, state):
+        step = state["step"] + 1
+        lr = schedule(state["step"])
+        beta2 = 1.0 - step.astype(jnp.float32) ** -decay_pow
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if _factored(p):
+                vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+                denom = (vr[..., None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None], eps))
+                u = g32 / jnp.sqrt(jnp.maximum(denom, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+        is_stat = lambda t: isinstance(t, dict) and (  # noqa: E731
+            "v" in t or "vr" in t)
+        out = jax.tree_util.tree_map(upd, params, grads, state["stats"],
+                                     is_leaf=lambda t: False)
+        # out leaves are tuples (param, stat-dict)
+        new_params = jax.tree_util.tree_map(
+            lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+        new_stats = jax.tree_util.tree_map(
+            lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+        del is_stat
+        return new_params, {"step": step, "stats": new_stats}
+
+    return Optimizer("adafactor", init, update)
+
+
+# =============================================================================
+def make_optimizer(name: str, schedule=None, **kw) -> Optimizer:
+    table = {"sgd": sgd, "adamw": adamw, "adafactor": adafactor}
+    return table[name](schedule=schedule, **kw)

@@ -1,0 +1,53 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def f(step):
+        frac = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        return jnp.asarray(lr * frac, jnp.float32)
+    return f
+
+
+def cosine(lr: float, total_steps: int, warmup_steps: int = 0,
+           final_frac: float = 0.1):
+    def f(step):
+        warm = jnp.minimum(step / jnp.maximum(warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr * warm * cos, jnp.float32)
+    return f
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.01,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    stable plateau, fast exponential-ish decay in the last ``decay_frac``."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        warm = jnp.minimum(step / warmup, 1.0)
+        in_decay = step > decay_start
+        prog = jnp.clip((step - decay_start)
+                        / jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0)
+        decay = jnp.where(in_decay, final_frac ** prog, 1.0)
+        return jnp.asarray(lr * warm * decay, jnp.float32)
+    return f
+
+
+def step_decay(lr: float, boundaries, scales):
+    """Paper's VGG schedule: 0.01, then 0.001 from round 50."""
+    def f(step):
+        out = jnp.asarray(lr, jnp.float32)
+        for b, s in zip(boundaries, scales):
+            out = jnp.where(step >= b, lr * s, out)
+        return out
+    return f

@@ -1,0 +1,8 @@
+from repro.parallel.sharding import (  # noqa: F401
+    AxisRules,
+    activation_spec,
+    make_axis_rules,
+    param_pspecs,
+    shard,
+    use_rules,
+)

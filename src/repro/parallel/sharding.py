@@ -1,0 +1,206 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+A single source of truth maps *logical* axis names to physical mesh axes:
+
+    batch   -> ('data',)            or ('pod', 'data') multi-pod
+    fsdp    -> 'data'               (ZeRO-3-style parameter sharding)
+    tp      -> 'model'              (tensor parallelism)
+    experts -> 'model'              (expert parallelism, when E % tp == 0)
+    cache_seq -> 'model'            (seq-sharded KV cache for decode)
+
+Parameter PartitionSpecs are derived from leaf *path names* via
+``param_pspecs`` so models never annotate arrays;  every rule checks
+divisibility of the concrete dim against the mesh axis size and falls back to
+replication when it does not divide (e.g. arctic's 56 heads).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import re
+import threading
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    """Resolved logical->physical mapping for one mesh configuration."""
+    mesh: Mesh
+    batch: Tuple[str, ...] = ("data",)
+    fsdp: Tuple[str, ...] = ("data",)
+    tp: Tuple[str, ...] = ("model",)
+    # sequence-parallel attention (activations' seq dim over tp) — used when
+    # heads % tp != 0, or as an explicit hillclimb option.
+    seq_shard: Tuple[str, ...] = ()
+    cache_seq: Tuple[str, ...] = ("model",)
+    # disable fsdp/tp selectively (ablations + hillclimb)
+    logical: Dict[str, Tuple[str, ...]] = dataclasses.field(default_factory=dict)
+
+    def axis_size(self, axes: Tuple[str, ...]) -> int:
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def resolve(self, name: str, dim: Optional[int] = None) -> MeshAxes:
+        """Logical name -> physical axes, with divisibility fallback."""
+        table: Dict[str, Tuple[str, ...]] = {
+            "batch": self.batch,
+            "fsdp": self.fsdp,
+            "tp": self.tp,
+            "experts": self.tp,
+            "vocab": self.tp,
+            "cache_seq": self.cache_seq,
+            "seq": self.seq_shard,
+            "none": (),
+        }
+        table.update(self.logical)
+        axes = table.get(name, ())
+        if not axes:
+            return None
+        if dim is not None and dim % self.axis_size(axes) != 0:
+            return None  # divisibility fallback -> replicate
+        return axes if len(axes) > 1 else axes[0]
+
+
+def make_axis_rules(mesh: Mesh, *, fsdp: bool = True, tp: bool = True,
+                    seq_shard: bool = False,
+                    extra: Optional[Dict[str, Tuple[str, ...]]] = None) -> AxisRules:
+    axes = dict(mesh.shape)
+    batch = tuple(a for a in ("pod", "data") if a in axes)
+    return AxisRules(
+        mesh=mesh,
+        batch=batch or ("data",),
+        fsdp=("data",) if (fsdp and "data" in axes) else (),
+        tp=("model",) if (tp and "model" in axes) else (),
+        seq_shard=("model",) if seq_shard else (),
+        cache_seq=("model",) if "model" in axes else (),
+        logical=dict(extra or {}),
+    )
+
+
+# --- thread-local active rules (set by the launcher) -------------------------
+_state = threading.local()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[AxisRules]):
+    prev = getattr(_state, "rules", None)
+    _state.rules = rules
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def current_rules() -> Optional[AxisRules]:
+    return getattr(_state, "rules", None)
+
+
+def activation_spec(names: Sequence[str], shape: Optional[Sequence[int]] = None,
+                    rules: Optional[AxisRules] = None) -> P:
+    rules = rules or current_rules()
+    if rules is None:
+        return P()
+    dims = list(shape) if shape is not None else [None] * len(names)
+    return P(*[rules.resolve(n, d) for n, d in zip(names, dims)])
+
+
+def shard(x: jnp.ndarray, names: Sequence[str]) -> jnp.ndarray:
+    """Apply a sharding constraint if rules are active; no-op otherwise."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    spec = activation_spec(names, x.shape, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(rules.mesh, spec))
+
+
+# =============================================================================
+# parameter PartitionSpecs from leaf path names
+# =============================================================================
+# (regex on the flattened '/'-joined path, ndim) -> logical names per dim.
+# First match wins; checked in order.
+_PARAM_RULES: Tuple[Tuple[str, Tuple[str, ...]], ...] = (
+    # embeddings
+    (r"(^|/)embed$",        ("vocab", "fsdp")),
+    (r"(^|/)unembed$",      ("fsdp", "vocab")),
+    (r"(^|/)patch_proj$",   ("fsdp", "none")),
+    # attention
+    (r"/w[qkv]$",           ("fsdp", "tp")),
+    (r"/wo$",               ("tp", "fsdp")),
+    # moe stacked experts (E, d, f) / (E, f, d) — MUST precede the generic
+    # ffn rules (same leaf names, one extra rank): expert-sharded when E
+    # divides tp, else the inner dims shard (divisibility fallback).
+    (r"/moe/w_(gate|up)$",  ("experts", "fsdp", "tp")),
+    (r"/moe/w_down$",       ("experts", "tp", "fsdp")),
+    # ffn
+    (r"/w_(gate|up)$",      ("fsdp", "tp")),
+    (r"/w_down$",           ("tp", "fsdp")),
+    (r"/router$",           ("fsdp", "none")),
+    # mamba2 / rg-lru
+    (r"/in_proj$",          ("fsdp", "tp")),
+    (r"/out_proj$",         ("tp", "fsdp")),
+    (r"/conv_w$",           ("none", "tp")),
+    (r"/w_in[12]$",         ("fsdp", "tp")),
+    (r"/w_(r|i)$",          ("fsdp", "tp")),
+    (r"/w_lru_out$",        ("tp", "fsdp")),
+)
+
+
+def _spec_for_leaf(path: str, shape: Tuple[int, ...], rules: AxisRules) -> P:
+    for pat, names in _PARAM_RULES:
+        if re.search(pat, path):
+            ndim_names = names
+            if len(ndim_names) != len(shape):
+                continue  # rank mismatch -> try the next rule
+            resolved = []
+            used: set = set()
+            for n, d in zip(ndim_names, shape):
+                ax = rules.resolve(n, d)
+                # a mesh axis may appear at most once in a spec
+                key = ax if not isinstance(ax, tuple) else ax
+                flat = (ax,) if isinstance(ax, str) else (ax or ())
+                if any(a in used for a in flat):
+                    ax = None
+                else:
+                    used.update(flat)
+                resolved.append(ax)
+            # stacked-layer leading dim: specs are applied to per-layer leaves
+            return P(*resolved)
+    return P(*([None] * len(shape)))
+
+
+def param_pspecs(params: Any, rules: AxisRules,
+                 stacked_layer_dims: int = 1) -> Any:
+    """PartitionSpec pytree mirroring ``params``.
+
+    ``stacked_layer_dims``: leaves under a path containing 'layers' have that
+    many leading stacked dims (scan over layers) which are never sharded.
+    """
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    specs = []
+    for path, leaf in flat:
+        spath = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", p))) for p in path
+        )
+        shape = tuple(leaf.shape)
+        lead = 0
+        if "layers" in spath.split("/"):
+            lead = min(stacked_layer_dims, len(shape))
+        inner = _spec_for_leaf(spath, shape[lead:], rules)
+        specs.append(P(*([None] * lead + list(inner))))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def named_shardings(specs: Any, mesh: Mesh) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,3 @@
+from repro.runtime.straggler import deadline_mask, reweight  # noqa: F401
+from repro.runtime.failures import FailureInjector  # noqa: F401
+from repro.runtime.elastic import admit_client, remove_client  # noqa: F401

@@ -1,0 +1,26 @@
+"""Deterministic failure injection for fault-tolerance drills.
+
+Models the two failure classes that matter at 1000+ nodes:
+* client/pod failure  — the client misses the round (mask=False); FedAvg
+  reweights over survivors (runtime/straggler.reweight);
+* coordinator crash   — training resumes from the latest atomic checkpoint;
+  tests/test_runtime.py asserts the resumed run is bitwise identical.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class FailureInjector:
+    def __init__(self, fail_prob: float = 0.0, seed: int = 0):
+        self.fail_prob = fail_prob
+        self.rng = np.random.RandomState(seed)
+
+    def round_mask(self, num_clients: int) -> np.ndarray:
+        """True = alive this round. At least one client always survives."""
+        if self.fail_prob <= 0:
+            return np.ones(num_clients, bool)
+        mask = self.rng.rand(num_clients) >= self.fail_prob
+        if not mask.any():
+            mask[self.rng.randint(num_clients)] = True
+        return mask

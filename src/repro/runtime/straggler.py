@@ -1,0 +1,33 @@
+"""Straggler mitigation beyond the paper's offloading: deadline-based
+drop-and-reweight for synchronous rounds.
+
+FedAdapt's offloading *shrinks* stragglers (the paper's core claim); this
+module handles the residual tail at 1000-node scale, where a preempted or
+failed node would otherwise stall the synchronous round: clients slower than
+``factor x median`` are excluded from this round's FedAvg and their weight is
+renormalized over the survivors.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+import numpy as np
+
+
+def deadline_mask(times: Sequence[float], factor: float = 2.0) -> np.ndarray:
+    """True = included. Always keeps at least one (the fastest) client."""
+    t = np.asarray(times, np.float64)
+    deadline = factor * np.median(t)
+    mask = t <= deadline
+    if not mask.any():
+        mask[np.argmin(t)] = True
+    return mask
+
+
+def reweight(weights: Sequence[float], mask: np.ndarray) -> np.ndarray:
+    w = np.asarray(weights, np.float64) * mask
+    s = w.sum()
+    if s <= 0:
+        w = mask.astype(np.float64)
+        s = w.sum()
+    return w / s

@@ -1,0 +1,5 @@
+import os
+import sys
+
+# tests see 1 CPU device (never set the 512-device flag globally)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))

@@ -1,0 +1,168 @@
+"""FedAdapt core: cost model vs the paper's tables, clustering (Table VII),
+OP mapping boundaries (§V-B), reward (Eq. 5), and RL convergence."""
+import numpy as np
+import pytest
+
+from repro.configs.vgg import VGG5, VGG8
+from repro.core import costmodel as cm
+from repro.core import offload
+from repro.core.agent import PPOAgent, PPOConfig, current_std
+from repro.core.clustering import cluster_devices, elbow, kmeans
+from repro.core.controller import FedAdaptController, train_rl_agent
+from repro.core.env import SimulatedCluster
+
+TABLE_V = {75e6: [2.38, 3.61, 5.24, 4.36], 50e6: [2.7, 3.9, 5.26, 4.36],
+           25e6: [3.52, 4.36, 5.42, 4.36], 10e6: [6.07, 5.31, 6.73, 4.36]}
+
+
+# =============================================================================
+# cost model
+# =============================================================================
+def test_vgg5_fractions_match_paper():
+    w = cm.vgg_workload(VGG5)
+    fr = offload.op_fractions(w, VGG5.ops)
+    paper = np.asarray([0.1, 0.66, 0.94, 1.0])
+    assert np.allclose(fr, paper, atol=0.03), fr
+
+
+def test_op_boundaries_match_paper():
+    w = cm.vgg_workload(VGG5)
+    b = offload.op_boundaries(offload.op_fractions(w, VGG5.ops))
+    paper = np.asarray([0.38, 0.79, 0.96])
+    assert np.allclose(b, paper, atol=0.035), b
+
+
+def test_calibration_reproduces_table_v():
+    w = cm.vgg_workload(VGG5)
+    c_dev, c_srv, ovh = cm.calibrate_linear(w, VGG5.ops, TABLE_V[75e6], 75e6)
+    for bw, meas in TABLE_V.items():
+        pred = [cm.iteration_time(w, op, c_dev, c_srv, bw, ovh)
+                for op in VGG5.ops]
+        assert np.argmin(pred) == np.argmin(meas), f"best OP mismatch @ {bw}"
+        relerr = np.mean(np.abs(np.asarray(pred) - meas) / np.asarray(meas))
+        assert relerr < 0.15, f"relerr {relerr} @ {bw}"
+
+
+def test_iteration_time_native_has_no_comm():
+    w = cm.vgg_workload(VGG5)
+    t_fast = cm.iteration_time(w, w.num_layers, 1e9, 1e12, 1e6)
+    t_slow = cm.iteration_time(w, w.num_layers, 1e9, 1e12, 1e9)
+    assert t_fast == t_slow    # native: bandwidth-independent
+
+
+def test_lm_workload_cut_constant():
+    cfg_w = cm.lm_workload  # noqa
+    from repro.configs import get_config
+    cfg = get_config("llama3-8b")
+    w = cm.lm_workload(cfg, batch=2, seq=128)
+    assert len(w.layer_flops) == cfg.num_layers
+    assert np.allclose(w.cut_bytes[:-1], w.cut_bytes[0])
+    assert w.cut_bytes[-1] == 0.0
+
+
+def test_lm_flops_match_param_estimate():
+    """Analytic per-layer FLOPs ~ 2 * active-params * tokens per layer."""
+    from repro.configs import get_config
+    for arch in ["llama3-8b", "qwen3-0.6b", "mixtral-8x22b"]:
+        cfg = get_config(arch)
+        seq = 512
+        fl = cm.lm_layer_flops(cfg, seq).sum() + cm.lm_embed_head_flops(
+            cfg, seq)
+        est = 2.0 * cfg.active_param_count() * seq
+        assert 0.5 < fl / est < 2.0, f"{arch}: {fl:.2e} vs {est:.2e}"
+
+
+# =============================================================================
+# clustering
+# =============================================================================
+def test_clustering_matches_table_vii():
+    times = [0.07, 3.58, 3.75, 3.77, 5.14]
+    g = cluster_devices(times, [75e6] * 5, num_groups=3)
+    assert list(g.assignments) == [0, 1, 1, 1, 2]
+    # representative = max training time per group (paper §IV)
+    assert g.representative[1] == 3      # pi3_2 at 3.77
+    assert g.representative[2] == 4
+
+
+def test_low_bandwidth_group_isolation():
+    times = [0.07, 3.58, 3.75, 3.77, 5.14]
+    bw = [75e6, 75e6, 75e6, 10e6, 75e6]
+    g = cluster_devices(times, bw, num_groups=2, low_bw_threshold=25e6)
+    assert g.low_bw_group is not None
+    assert list(g.members(g.low_bw_group)) == [3]
+
+
+def test_kmeans_converges_and_assigns_nearest():
+    rng = np.random.RandomState(0)
+    pts = np.concatenate([rng.randn(20, 2), rng.randn(20, 2) + 10])
+    centers, assign = kmeans(pts, 2, seed=0)
+    d = np.linalg.norm(pts[:, None] - centers[None], axis=-1)
+    np.testing.assert_array_equal(assign, d.argmin(1))
+
+
+def test_elbow_finds_three_blobs():
+    rng = np.random.RandomState(0)
+    pts = np.concatenate([rng.randn(30, 1) * 0.05,
+                          rng.randn(30, 1) * 0.05 + 5,
+                          rng.randn(30, 1) * 0.05 + 10])
+    assert elbow(pts, k_max=6) == 3
+
+
+# =============================================================================
+# offload mapping + reward
+# =============================================================================
+def test_action_to_op_uses_midpoint_boundaries():
+    fr = np.asarray([0.1, 0.66, 0.94, 1.0])
+    ops = [2, 4, 5, 7]
+    assert offload.action_to_op(0.37, fr, ops) == 2
+    assert offload.action_to_op(0.39, fr, ops) == 4
+    assert offload.action_to_op(0.78, fr, ops) == 4
+    assert offload.action_to_op(0.81, fr, ops) == 5
+    assert offload.action_to_op(0.98, fr, ops) == 7
+
+
+def test_f_norm_signs_and_bounds():
+    assert offload.f_norm(1.0, 2.0) == 0.5        # 2x faster -> +0.5
+    assert offload.f_norm(2.0, 2.0) == 0.0
+    assert offload.f_norm(4.0, 2.0) == -0.5       # 2x slower -> -0.5
+    assert -1 < offload.f_norm(1e9, 1.0) <= 1
+
+
+# =============================================================================
+# PPO
+# =============================================================================
+def test_std_decay_schedule():
+    cfg = PPOConfig(num_groups=3)
+    assert current_std(cfg, 0) == 0.5
+    assert current_std(cfg, 200) == 0.5
+    assert current_std(cfg, 201) == pytest.approx(0.45)
+    assert current_std(cfg, 500) == pytest.approx(cfg.std_floor)
+
+
+def _paper_sim(seed=1):
+    from repro.core.testbed import paper_testbed
+    w, devices, c_srv, ovh = paper_testbed(VGG5)
+    return SimulatedCluster(w, devices, c_srv, VGG5.ops, iterations=5,
+                            jitter=0.03, seed=seed, overhead_s=ovh), w
+
+
+@pytest.mark.slow
+def test_rl_converges_to_paper_optimal_factored():
+    sim, w = _paper_sim()
+    agent = PPOAgent(PPOConfig(num_groups=3, factored=True), seed=0)
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=3,
+                             low_bw_threshold=None, agent=agent, seed=0)
+    hist = train_rl_agent(sim, ctl, rounds=400)
+    final = hist["actions"][-20:].mean(axis=0)
+    assert final[0] > 0.9, f"G1 (jetson) should stay native: {final}"
+    assert final[1] < 0.38 and final[2] < 0.38, f"Pi groups -> OP1: {final}"
+    assert list(hist["ops"][-1]) == [7, 2, 2, 2, 2]
+
+
+def test_controller_round_trip_smoke():
+    sim, w = _paper_sim()
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=3,
+                             low_bw_threshold=None, seed=0)
+    hist = train_rl_agent(sim, ctl, rounds=12)
+    assert len(hist["reward"]) == 12
+    assert np.isfinite(hist["reward"]).all()

@@ -1,0 +1,116 @@
+"""FL substrate: FedAvg algebra, split/native parity, straggler handling,
+failure injection, transport accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vgg import VGG5
+from repro.data.synthetic import make_cifar_like, split_clients
+from repro.fl.comm import Transport, constant_bandwidth, paper_schedule
+from repro.fl.fedavg import fedavg, fedavg_delta, model_bytes
+from repro.fl.loop import FLConfig, run_federated
+from repro.models import vgg as vgg_model
+from repro.runtime.failures import FailureInjector
+from repro.runtime.straggler import deadline_mask, reweight
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_fedavg_of_identical_params_is_identity():
+    p = vgg_model.init(VGG5, KEY)
+    avg = fedavg([p, p, p])
+    for a, b in zip(jax.tree_util.tree_leaves(avg),
+                    jax.tree_util.tree_leaves(p)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_fedavg_weighted_mean():
+    a = {"w": jnp.ones((4,))}
+    b = {"w": jnp.zeros((4,))}
+    out = fedavg([a, b], weights=[3, 1])
+    np.testing.assert_allclose(np.asarray(out["w"]), 0.75)
+
+
+def test_fedavg_delta_equals_fedavg_without_compression():
+    g = {"w": jnp.zeros((8,))}
+    clients = [{"w": jnp.full((8,), float(i))} for i in range(3)]
+    np.testing.assert_allclose(
+        np.asarray(fedavg_delta(g, clients)["w"]),
+        np.asarray(fedavg(clients)["w"]), atol=1e-6)
+
+
+def test_split_loss_equals_native_loss_all_ops():
+    params = vgg_model.init(VGG5, KEY)
+    data = make_cifar_like(16, seed=1)
+    batch = {"images": jnp.asarray(data["images"]),
+             "labels": jnp.asarray(data["labels"])}
+    native = float(vgg_model.loss_fn(VGG5, params, batch))
+    for op in VGG5.ops:
+        split = float(vgg_model.split_loss(VGG5, params, batch, op))
+        assert abs(split - native) < 1e-5, f"OP cut at {op}: {split}"
+
+
+def test_lm_split_loss_equals_native():
+    from repro.configs import get_smoke_config
+    from repro.models import api, split
+    cfg = get_smoke_config("llama3-8b")
+    params = api.init(cfg, KEY, jnp.float32)
+    tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    native = float(api.loss(cfg, params, batch))
+    for op in [0, 1, cfg.num_layers]:
+        s = float(split.split_loss(cfg, params, batch, op))
+        assert abs(s - native) < 1e-5
+
+
+def test_straggler_deadline_and_reweight():
+    times = np.asarray([1.0, 1.1, 0.9, 10.0])
+    mask = deadline_mask(times, factor=2.0)
+    np.testing.assert_array_equal(mask, [True, True, True, False])
+    w = reweight(np.asarray([1.0, 1.0, 1.0, 1.0]), mask)
+    assert w[3] == 0 and abs(w.sum() - 1) < 1e-9
+
+
+def test_deadline_always_keeps_someone():
+    mask = deadline_mask([5.0], factor=0.0001)
+    assert mask.any()
+
+
+def test_failure_injection_deterministic_and_bounded():
+    inj = FailureInjector(0.5, seed=3)
+    masks = [inj.round_mask(8) for _ in range(20)]
+    inj2 = FailureInjector(0.5, seed=3)
+    masks2 = [inj2.round_mask(8) for _ in range(20)]
+    for a, b in zip(masks, masks2):
+        np.testing.assert_array_equal(a, b)
+    assert all(m.any() for m in masks)
+
+
+def test_transport_accounting_and_schedule():
+    tr = Transport(constant_bandwidth(75e6))
+    t = tr.transfer_time(1e6, 0, 0)     # 1 MB over 75 Mbps
+    assert abs(t - 8e6 / 75e6) < 1e-9
+    sched = paper_schedule()
+    assert sched(10, 0) == 75e6
+    assert sched(50, 0) == 10e6         # jetson throttled first slot
+    assert sched(50, 1) == 75e6
+    assert sched(95, 4) == 10e6         # pi3_2 last slot
+
+
+def test_federated_training_learns_and_split_matches():
+    data = make_cifar_like(600, seed=0)
+    test = make_cifar_like(200, seed=9)
+    clients = split_clients(data, 3)
+    fl = FLConfig(rounds=5, local_iters=4, batch_size=40, mode="fl",
+                  augment=False)
+    h = run_federated(VGG5, clients, test, fl)
+    assert h["accuracy"][-1] > h["accuracy"][0] + 0.2
+    h2 = run_federated(VGG5, clients, test, FLConfig(
+        rounds=5, local_iters=4, batch_size=40, mode="sfl", static_op=2,
+        augment=False))
+    assert abs(h["accuracy"][-1] - h2["accuracy"][-1]) < 1e-6
+
+
+def test_model_bytes():
+    p = {"a": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros((2,), jnp.int8)}
+    assert model_bytes(p) == 4 * 4 * 4 + 2

@@ -1,0 +1,149 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs the ref.py
+pure-jnp oracles (interpret=True executes the Pallas body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.quant_transfer.ops import (
+    dequantize,
+    fake_quant_int8,
+    quantize,
+)
+from repro.kernels.quant_transfer.ref import dequant_ref, quant_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref, ssd_sequential
+from repro.kernels.topk_compress.ops import compress_tree, topk_compress
+from repro.kernels.topk_compress.ref import topk_compress_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# =============================================================================
+# flash attention
+# =============================================================================
+FLASH_CASES = [
+    # B, Sq, Sk, H, KV, D, causal, window, softcap, dtype
+    (2, 128, 128, 4, 2, 64, True, 0, 0.0, jnp.float32),
+    (1, 256, 256, 8, 8, 64, True, 64, 0.0, jnp.float32),
+    (2, 100, 100, 8, 2, 32, True, 0, 50.0, jnp.float32),
+    (1, 128, 384, 4, 1, 64, False, 0, 0.0, jnp.float32),
+    (1, 64, 64, 2, 2, 128, True, 32, 30.0, jnp.float32),
+    (2, 128, 128, 4, 4, 64, True, 0, 0.0, jnp.bfloat16),
+]
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Sk,H,KV,D,causal,window,cap,dtype", FLASH_CASES)
+def test_flash_attention_vs_ref(B, Sq, Sk, H, KV, D, causal, window, cap,
+                                dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, D), dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_k=64)
+    ref = attention_ref(q, k, v, causal=causal, window=window, softcap=cap)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_block_shape_invariance():
+    """Different VMEM block shapes must give identical results."""
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (1, 192, 4, 64))
+    k = jax.random.normal(ks[1], (1, 192, 2, 64))
+    v = jax.random.normal(ks[2], (1, 192, 2, 64))
+    outs = [flash_attention(q, k, v, block_q=bq, block_k=bk)
+            for bq, bk in [(64, 64), (128, 64), (64, 128), (192, 192)]]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+# =============================================================================
+# ssd scan
+# =============================================================================
+SSD_CASES = [
+    (2, 64, 4, 16, 16, 16, jnp.float32),
+    (1, 128, 2, 32, 32, 32, jnp.float32),
+    (2, 96, 4, 16, 16, 32, jnp.float32),    # padded seq
+    (1, 64, 2, 16, 16, 64, jnp.float32),    # chunk == seq
+]
+
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk,dtype", SSD_CASES)
+def test_ssd_scan_vs_sequential(B, S, H, P, N, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (B, S, N))
+    Cm = jax.random.normal(ks[4], (B, S, N))
+    y_seq, _ = ssd_sequential(x, dt, A, Bm, Cm)
+    y_chunk, _ = ssd_ref(x, dt, A, Bm, Cm, chunk)
+    y_pal = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y_chunk), np.asarray(y_seq),
+                               atol=5e-4, rtol=5e-4)
+    np.testing.assert_allclose(np.asarray(y_pal), np.asarray(y_seq),
+                               atol=5e-4, rtol=5e-4)
+
+
+# =============================================================================
+# topk compress
+# =============================================================================
+@pytest.mark.parametrize("n,k,block", [(2048, 16, 1024), (4096, 64, 512),
+                                       (1024, 1, 1024), (512, 512, 512)])
+def test_topk_vs_ref(n, k, block):
+    x = jax.random.normal(jax.random.fold_in(KEY, n + k), (n,))
+    out = topk_compress(x, k, block)
+    ref = topk_compress_ref(x, min(k, block), block)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert int(jnp.sum(out != 0)) == (n // block) * min(k, block)
+
+
+def test_error_feedback_telescopes():
+    """compressed_t + error_t == carried_t for every round (no signal lost)."""
+    tree = {"w": jax.random.normal(KEY, (4096,))}
+    err = None
+    carried_total = np.zeros(4096)
+    sent_total = np.zeros(4096)
+    for i in range(4):
+        g = {"w": jax.random.normal(jax.random.fold_in(KEY, i), (4096,))}
+        carried_total += np.asarray(g["w"])
+        comp, err = compress_tree(g, err, density=0.05)
+        sent_total += np.asarray(comp["w"])
+    # after the last round, unsent residual == error feedback
+    np.testing.assert_allclose(sent_total + np.asarray(err["w"]),
+                               carried_total, atol=1e-4)
+
+
+# =============================================================================
+# quant transfer
+# =============================================================================
+@pytest.mark.parametrize("shape", [(256, 64), (3, 100, 32), (7, 13, 128)])
+def test_quant_vs_ref(shape):
+    x = jax.random.normal(KEY, shape) * 5
+    q, s = quantize(x)
+    qr, sr = quant_ref(x.reshape(-1, shape[-1]))
+    assert q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(q.reshape(-1, shape[-1]),
+                                          np.int32),
+                               np.asarray(qr, np.int32), atol=1)
+    recon = dequantize(q, s)
+    ref_recon = dequant_ref(qr, sr).reshape(shape)
+    np.testing.assert_allclose(np.asarray(recon), ref_recon, atol=1e-3)
+    # rowwise error bound: |x - recon| <= scale/2 (+eps for the atol=1 tie)
+    err = np.abs(np.asarray(x) - np.asarray(recon))
+    bound = np.asarray(s)[..., None] * 1.0 + 1e-6
+    assert (err <= bound).all()
+
+
+def test_fake_quant_straight_through_grad():
+    x = jax.random.normal(KEY, (64, 32))
+    g = jax.grad(lambda t: jnp.sum(fake_quant_int8(t) * 3.0))(x)
+    np.testing.assert_allclose(np.asarray(g), 3.0, atol=1e-6)

@@ -1,0 +1,49 @@
+"""Sharded (shard_map expert-parallel) MoE must match the local reference
+bit-for-bit.  Needs >1 device, so it runs in a subprocess with
+--xla_force_host_platform_device_count=4 (tests themselves must see 1 CPU
+device, per the dry-run isolation rules)."""
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import dataclasses
+    import jax, jax.numpy as jnp
+    from repro.configs import get_smoke_config
+    from repro.configs.base import MoEConfig
+    from repro.models import layers as L
+    from repro.parallel.sharding import make_axis_rules, use_rules
+
+    mesh = jax.make_mesh((2, 2), ("data", "model"))
+    cases = [("mixtral-8x22b", dict(num_experts=4, top_k=2)),
+             ("arctic-480b", dict(num_experts=8, top_k=2,
+                                  dense_residual=True))]
+    for arch, patch in cases:
+        cfg = get_smoke_config(arch)
+        cfg = dataclasses.replace(
+            cfg, moe=MoEConfig(capacity_factor=8.0, **patch))
+        key = jax.random.PRNGKey(0)
+        p = L.init_moe(key, cfg, jnp.float32)
+        for S in (8, 1):            # train-like and decode
+            x = jax.random.normal(key, (4, S, cfg.d_model)) * 0.5
+            local = L._moe_block_local(cfg, p, x)
+            rules = make_axis_rules(mesh)
+            with use_rules(rules):
+                sharded = jax.jit(
+                    lambda p, x: L.moe_block(cfg, p, x))(p, x)
+            err = float(jnp.max(jnp.abs(local - sharded)))
+            assert err < 1e-4, f"{arch} S={S}: err {err}"
+            print(f"{arch} S={S}: OK ({err:.2e})")
+""")
+
+
+def test_sharded_moe_matches_local_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert out.stdout.count("OK") == 4, out.stdout

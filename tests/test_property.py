@@ -1,0 +1,119 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.vgg import VGG5
+from repro.core import costmodel as cm
+from repro.core import offload
+from repro.core.clustering import kmeans
+from repro.fl.fedavg import fedavg
+from repro.kernels.quant_transfer.ops import dequantize, quantize
+from repro.kernels.topk_compress.ops import topk_compress
+from repro.runtime.straggler import deadline_mask, reweight
+
+W5 = cm.vgg_workload(VGG5)
+FR5 = offload.op_fractions(W5, VGG5.ops)
+
+
+# =============================================================================
+# Eq. 1 cost model invariants
+# =============================================================================
+@given(st.integers(0, 7),
+       st.floats(1e8, 1e12), st.floats(1e9, 1e13),
+       st.floats(1e6, 1e9), st.floats(1e6, 1e9))
+@settings(max_examples=60, deadline=None)
+def test_more_bandwidth_never_slower(op, c_dev, c_srv, bw1, bw2):
+    lo, hi = sorted([bw1, bw2])
+    t_lo = cm.iteration_time(W5, op, c_dev, c_srv, lo)
+    t_hi = cm.iteration_time(W5, op, c_dev, c_srv, hi)
+    assert t_hi <= t_lo + 1e-9
+
+
+@given(st.integers(0, 7), st.floats(1e8, 1e12), st.floats(1e8, 1e12),
+       st.floats(1e9, 1e13), st.floats(1e6, 1e9))
+@settings(max_examples=60, deadline=None)
+def test_faster_device_never_slower(op, c1, c2, c_srv, bw):
+    lo, hi = sorted([c1, c2])
+    assert cm.iteration_time(W5, op, hi, c_srv, bw) <= \
+        cm.iteration_time(W5, op, lo, c_srv, bw) + 1e-9
+
+
+@given(st.floats(0.001, 1.0))
+@settings(max_examples=100, deadline=None)
+def test_action_to_op_is_monotone_step(mu):
+    """Larger mu never maps to an earlier OP."""
+    op = offload.action_to_op(mu, FR5, VGG5.ops)
+    op2 = offload.action_to_op(min(mu + 0.05, 1.0), FR5, VGG5.ops)
+    assert op2 >= op
+
+
+@given(st.floats(0.01, 100.0), st.floats(0.01, 100.0))
+@settings(max_examples=100, deadline=None)
+def test_f_norm_bounded_and_signed(t, b):
+    v = offload.f_norm(t, b)
+    assert -1.0 < v < 1.0 or v == 0.0
+    assert (v > 0) == (t < b)
+
+
+# =============================================================================
+# clustering
+# =============================================================================
+@given(st.lists(st.floats(0.01, 100.0), min_size=4, max_size=12),
+       st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_kmeans_assignment_is_nearest_center(times, k):
+    pts = np.asarray(times)[:, None]
+    centers, assign = kmeans(pts, k, seed=0)
+    d = np.linalg.norm(pts[:, None] - centers[None], axis=-1)
+    own = d[np.arange(len(pts)), assign]
+    assert (own <= d.min(axis=1) + 1e-9).all()
+
+
+@given(st.lists(st.floats(0.1, 50.0), min_size=3, max_size=10))
+@settings(max_examples=40, deadline=None)
+def test_deadline_keeps_fastest_and_reweight_normalizes(times):
+    mask = deadline_mask(times, factor=1.5)
+    assert mask[int(np.argmin(times))]
+    w = reweight(np.ones(len(times)), mask)
+    assert abs(w.sum() - 1.0) < 1e-9
+    assert (w[~mask] == 0).all()
+
+
+# =============================================================================
+# aggregation + compression
+# =============================================================================
+@given(st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=20, deadline=None)
+def test_fedavg_bounded_by_extremes(k, seed):
+    key = jax.random.PRNGKey(seed)
+    clients = [{"w": jax.random.normal(jax.random.fold_in(key, i), (6,))}
+               for i in range(k)]
+    avg = fedavg(clients)["w"]
+    stack = jnp.stack([c["w"] for c in clients])
+    assert bool(jnp.all(avg >= stack.min(0) - 1e-6))
+    assert bool(jnp.all(avg <= stack.max(0) + 1e-6))
+
+
+@given(st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+@settings(max_examples=15, deadline=None)
+def test_topk_keeps_largest_magnitudes(k, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    out = np.asarray(topk_compress(x, k, 256))
+    kept = np.abs(np.asarray(x))[out != 0]
+    dropped = np.abs(np.asarray(x))[out == 0]
+    assert (out != 0).sum() == min(k, 256)
+    if len(kept) and len(dropped):
+        assert kept.min() >= dropped.max() - 1e-6
+
+
+@given(st.integers(0, 2 ** 31 - 1), st.floats(0.1, 100.0))
+@settings(max_examples=15, deadline=None)
+def test_quant_roundtrip_error_bound(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (32, 64)) * scale
+    q, s = quantize(x)
+    recon = dequantize(q, s)
+    err = jnp.abs(x - recon)
+    rowmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    assert bool(jnp.all(err <= rowmax / 127.0 + 1e-5))

@@ -1,0 +1,104 @@
+"""Large-scale runnability drills: crash + bitwise resume, elastic
+membership, straggler-dropped rounds still converge."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.vgg import VGG5
+from repro.core import costmodel as cm
+from repro.core.controller import FedAdaptController
+from repro.data.synthetic import make_cifar_like, split_clients
+from repro.fl.loop import FLConfig, run_federated
+from repro.runtime.elastic import admit_client, remove_client
+
+
+def test_crash_resume_bitwise(tmp_path):
+    """Run 6 rounds; separately run 3 rounds -> checkpoint -> resume 3 more.
+    The resumed run must produce the identical final accuracy trace."""
+    data = make_cifar_like(300, seed=0)
+    test = make_cifar_like(100, seed=9)
+    clients = split_clients(data, 3)
+    base = dict(local_iters=3, batch_size=30, mode="fl", augment=False,
+                seed=0)
+
+    full = run_federated(VGG5, clients, test,
+                         FLConfig(rounds=6, **base))
+
+    ck = str(tmp_path / "ck")
+    run_federated(VGG5, clients, test,
+                  FLConfig(rounds=3, checkpoint_dir=ck, checkpoint_every=3,
+                           **base))
+    resumed = run_federated(VGG5, clients, test,
+                            FLConfig(rounds=6, checkpoint_dir=ck,
+                                     checkpoint_every=3, **base),
+                            resume=True)
+    # rounds 3..5 of the resumed run must match the uninterrupted run
+    np.testing.assert_allclose(resumed["accuracy"][-3:],
+                               full["accuracy"][-3:], atol=1e-6)
+
+
+def test_client_failures_do_not_stall_training():
+    data = make_cifar_like(300, seed=0)
+    test = make_cifar_like(100, seed=9)
+    clients = split_clients(data, 4)
+    h = run_federated(VGG5, clients, test, FLConfig(
+        rounds=5, local_iters=3, batch_size=30, mode="fl", augment=False,
+        fail_prob=0.4, seed=0))
+    assert len(h["accuracy"]) == 5
+    assert h["accuracy"][-1] > 0.15          # still learns
+    assert h["dropped"].sum() > 0            # failures actually happened
+
+
+def test_straggler_drop_reduces_round_time():
+    w = cm.vgg_workload(VGG5)
+    devices = [cm.DeviceProfile(f"d{i}", 2e9, 75e6) for i in range(4)]
+    devices.append(cm.DeviceProfile("straggler", 1e8, 75e6))
+    from repro.core.env import SimulatedCluster
+    sim = SimulatedCluster(w, devices, 8e9, VGG5.ops, iterations=10)
+    data = make_cifar_like(500, seed=0)
+    test = make_cifar_like(100, seed=9)
+    clients = split_clients(data, 5)
+    h_drop = run_federated(VGG5, clients, test, FLConfig(
+        rounds=3, local_iters=2, batch_size=25, mode="fl", augment=False,
+        deadline_factor=2.0), sim=sim)
+    h_wait = run_federated(VGG5, clients, test, FLConfig(
+        rounds=3, local_iters=2, batch_size=25, mode="fl", augment=False),
+        sim=sim)
+    assert h_drop["round_time"].max() < h_wait["round_time"].max()
+    assert h_drop["dropped"].sum() >= 3      # straggler dropped each round
+
+
+def test_elastic_membership():
+    """Clustering makes the controller independent of K: clients join and
+    leave between rounds without retraining the agent (paper §IV)."""
+    w = cm.vgg_workload(VGG5)
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=3,
+                             low_bw_threshold=None, seed=0)
+    ctl.begin([0.2, 4.0, 4.1, 5.0])
+    plan4 = ctl.plan([0.2, 4.0, 4.1, 5.0], [75e6] * 4, explore=False)
+    assert len(plan4.ops) == 4
+
+    idx = admit_client(ctl, baseline_time=3.9)
+    assert idx == 4
+    plan5 = ctl.plan([0.2, 4.0, 4.1, 5.0, 3.9], [75e6] * 5, explore=False)
+    assert len(plan5.ops) == 5
+
+    remove_client(ctl, 0)
+    plan3 = ctl.plan([4.0, 4.1, 5.0, 3.9], [75e6] * 4, explore=False)
+    assert len(plan3.ops) == 4
+    # reward path still works after membership change
+    r = ctl.feedback([3.0, 3.1, 3.8, 3.0])
+    assert np.isfinite(r)
+
+
+def test_train_driver_checkpoint_resume(tmp_path):
+    """The LM train driver resumes from its checkpoint."""
+    from repro.launch.train import main as train_main
+    ck = str(tmp_path / "lm")
+    train_main(["--arch", "lm16m", "--rounds", "4", "--local-steps", "1",
+                "--batch", "1", "--seq", "32", "--ckpt-dir", ck,
+                "--ckpt-every", "2"])
+    params = train_main(["--arch", "lm16m", "--rounds", "6",
+                         "--local-steps", "1", "--batch", "1", "--seq", "32",
+                         "--ckpt-dir", ck, "--ckpt-every", "2", "--resume"])
+    assert params is not None

@@ -1,0 +1,115 @@
+"""Sharding rules: divisibility fallback, path-rule resolution, optimizer
+spec mirroring — without touching jax device state (mesh.shape is stubbed)."""
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.launch import steps as S
+from repro.models import api
+from repro.optim import adafactor, adamw
+from repro.parallel.sharding import AxisRules, param_pspecs
+
+
+def _rules(data=16, model=16, pod=0):
+    shape = {"data": data, "model": model}
+    if pod:
+        shape = {"pod": pod, **shape}
+    mesh = SimpleNamespace(shape=shape)
+    batch = tuple(a for a in ("pod", "data") if a in shape)
+    return AxisRules(mesh=mesh, batch=batch, fsdp=("data",), tp=("model",))
+
+
+def test_resolve_divisibility_fallback():
+    r = _rules()
+    assert r.resolve("tp", 1024) == "model"
+    assert r.resolve("tp", 56) is None           # arctic heads: replicate
+    assert r.resolve("batch", 256) == "data"
+    assert r.resolve("batch", 1) is None         # long_500k batch
+
+
+def test_multi_pod_batch_axes():
+    r = _rules(pod=2)
+    assert r.resolve("batch", 256) == ("pod", "data")
+    assert r.resolve("batch", 16) is None        # 16 % 32 != 0
+
+
+def test_param_specs_cover_all_leaves_and_divide():
+    r = _rules()
+    for arch in ["llama3-8b", "mixtral-8x22b", "mamba2-780m",
+                 "recurrentgemma-9b", "whisper-base"]:
+        cfg = get_smoke_config(arch)
+        shapes = jax.eval_shape(
+            lambda cfg=cfg: api.init(cfg, jax.random.PRNGKey(0),
+                                     jnp.float32))
+        specs = param_pspecs(shapes, r)
+        flat_shapes = jax.tree_util.tree_leaves(shapes)
+        flat_specs = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_shapes) == len(flat_specs)
+        for sh, spec in zip(flat_shapes, flat_specs):
+            assert len(spec) <= len(sh.shape)
+            for dim, ax in zip(sh.shape, list(spec)):
+                if ax is None:
+                    continue
+                axes = (ax,) if isinstance(ax, str) else ax
+                n = 1
+                for a in axes:
+                    n *= r.mesh.shape[a]
+                assert dim % n == 0, \
+                    f"{arch}: dim {dim} not divisible by {axes}"
+
+
+def test_full_size_configs_shard_big_leaves():
+    """At full (not smoke) sizes, the big 2D weights must actually shard."""
+    from repro.configs import get_config
+    r = _rules()
+    cfg = get_config("llama3-8b")
+    shapes = jax.eval_shape(
+        lambda: api.init(cfg, jax.random.PRNGKey(0), jnp.bfloat16))
+    specs = param_pspecs(shapes, r)
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    spec_leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    n_sharded = sum(
+        1 for (path, leaf), spec in zip(flat, spec_leaves)
+        if leaf.size > 1e6 and any(ax is not None for ax in spec))
+    n_big = sum(1 for path, leaf in flat if leaf.size > 1e6)
+    assert n_sharded == n_big, "every big leaf must be sharded"
+
+
+def test_opt_pspecs_mirror_params_and_factor():
+    r = _rules()
+    cfg = get_smoke_config("llama3-8b")
+    shapes = jax.eval_shape(
+        lambda: api.init(cfg, jax.random.PRNGKey(0), jnp.float32))
+    p_specs = S.model_param_pspecs(cfg, shapes, r)
+
+    opt = adamw()
+    o_shapes = S.abstract_opt_state(opt, shapes)
+    o_specs = S.opt_pspecs(o_shapes, shapes, p_specs, r)
+    # m/v spec == param spec for a sampled leaf
+    assert o_specs["m"]["embed"] == p_specs["embed"]
+    assert o_specs["v"]["layers"]["attn"]["wq"] == \
+        p_specs["layers"]["attn"]["wq"]
+
+    fac = adafactor()
+    f_shapes = S.abstract_opt_state(fac, shapes)
+    f_specs = S.opt_pspecs(f_shapes, shapes, p_specs, r)
+    wq_spec = list(p_specs["layers"]["attn"]["wq"])   # (None, fsdp, tp)
+    vr = f_specs["stats"]["layers"]["attn"]["wq"]["vr"]
+    vc = f_specs["stats"]["layers"]["attn"]["wq"]["vc"]
+    assert list(vr) == wq_spec[:-1]                    # drop last axis
+    assert list(vc) == wq_spec[:-2] + wq_spec[-1:]     # drop -2 axis
+
+
+def test_stacked_layer_dim_never_sharded():
+    r = _rules()
+    cfg = get_smoke_config("qwen3-0.6b")
+    shapes = jax.eval_shape(
+        lambda: api.init(cfg, jax.random.PRNGKey(0), jnp.float32))
+    specs = param_pspecs(shapes, r)
+    wq = specs["layers"]["attn"]["wq"]
+    assert wq[0] is None and len(wq) == 3
