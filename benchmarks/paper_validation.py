@@ -275,6 +275,30 @@ def bench_fig9():
 
 
 # =============================================================================
+# int8 smashed-data transport (paper future work, made first-class)
+# =============================================================================
+def bench_quant_transport():
+    """Comm-time saving of int8 cut activations, accounted through
+    fl/comm.Transport over the SplitProgram byte model (VGG-5 @ OP1)."""
+    from repro.fl.comm import Transport, constant_bandwidth
+    from repro.models.split_program import get_split_program
+    program = get_split_program(VGG5)
+    tr = Transport(constant_bandwidth(75e6))
+    op, batch, iters = 2, 100, 100
+    t0 = time.time()
+    full = quant = 0.0
+    for _ in range(iters):
+        up32 = program.cut_bytes(op, batch)
+        up8 = program.cut_bytes(op, batch, quantize=True)
+        down = program.cut_bytes(op, batch)
+        full += tr.round_comm_time(up32, down, 0, 0)
+        quant += tr.round_comm_time(up8, down, 0, 0)
+    us = (time.time() - t0) * 1e6
+    return us, (f"VGG-5 OP1 100-iter round: acts comm {full:.1f}s fp32 -> "
+                f"{quant:.1f}s int8 uplink (-{1 - quant/full:.0%})")
+
+
+# =============================================================================
 # controller overhead (paper §V-D: ~1.6 s = 0.5% of a round)
 # =============================================================================
 def bench_overhead():

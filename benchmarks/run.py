@@ -82,6 +82,7 @@ BENCHES = {
     "fig8": pv.bench_fig8,
     "fig11": pv.bench_fig11,
     "fig9": pv.bench_fig9,
+    "quant_transport": pv.bench_quant_transport,
     "overhead": pv.bench_overhead,
     # system benches
     "roofline": bench_roofline,

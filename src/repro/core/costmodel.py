@@ -128,23 +128,44 @@ def lm_workload(cfg: ModelConfig, batch: int, seq: int,
     return Workload(cfg.name, fl, cuts)
 
 
+def program_workload(program, batch: int, seq: Optional[int] = None,
+                     bytes_per_el: int = 4) -> Workload:
+    """Materialize (W, L(mu)) from any ``models.split_program.SplitProgram``
+    — the one builder every config family shares."""
+    fl = np.asarray(program.layer_flops(batch, seq), np.float64)
+    cuts = np.asarray(
+        [program.cut_bytes(op, batch, seq, bytes_per_el=bytes_per_el)
+         for op in range(program.num_boundaries)], np.float64)
+    return Workload(getattr(program.cfg, "name", program.family), fl, cuts)
+
+
 # =============================================================================
 # Eq. 1
 # =============================================================================
-def iteration_time(
+def compute_time(
     w: Workload,
     op: int,                      # cut after `op` layers; op == L => native
     c_dev: float,                 # device FLOP/s
     c_srv: float,                 # server FLOP/s
+) -> float:
+    """The device + server compute terms of Eq. 1, no network (the transport
+    path in fl/loop.py accounts comm separately through fl/comm.Transport)."""
+    total = w.layer_flops.sum() * w.train_mult
+    dev = w.layer_flops[:op].sum() * w.train_mult
+    return dev / c_dev + (total - dev) / c_srv
+
+
+def iteration_time(
+    w: Workload,
+    op: int,
+    c_dev: float,
+    c_srv: float,
     net_bps: float,               # link bits/s
     overhead_s: float = 0.0,
 ) -> float:
-    total = w.layer_flops.sum() * w.train_mult
-    dev = w.layer_flops[:op].sum() * w.train_mult
-    srv = total - dev
     native = op >= w.num_layers
     comm_bits = 0.0 if native else 2.0 * w.cut_bytes[op] * 8.0   # acts + grads
-    t = dev / c_dev + srv / c_srv + comm_bits / net_bps
+    t = compute_time(w, op, c_dev, c_srv) + comm_bits / net_bps
     return t + (0.0 if native else overhead_s)
 
 

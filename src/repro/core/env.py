@@ -14,7 +14,12 @@ from typing import Callable, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.costmodel import DeviceProfile, Workload, iteration_time
+from repro.core.costmodel import (
+    DeviceProfile,
+    Workload,
+    compute_time,
+    iteration_time,
+)
 
 BandwidthFn = Callable[[int, int], float]     # (round, device_idx) -> bits/s
 
@@ -55,6 +60,21 @@ class SimulatedCluster:
                 speed *= float(np.exp(self._rng.randn() * self.jitter))
             t = iteration_time(self.workload, op, speed, self.server_flops,
                                bw[i], self.overhead_s)
+            out.append(t * self.iterations)
+        return np.asarray(out)
+
+    def round_compute_times(self, ops: Sequence[int],
+                            round_idx: int) -> np.ndarray:
+        """Per-device round time, compute terms only (no network): the
+        transport path in fl/loop.py adds comm via fl/comm.Transport."""
+        out = []
+        for dev, op in zip(self.devices, ops):
+            speed = dev.flops_per_s
+            if self.jitter > 0:
+                speed *= float(np.exp(self._rng.randn() * self.jitter))
+            t = compute_time(self.workload, op, speed, self.server_flops)
+            if op < self.workload.num_layers:
+                t += self.overhead_s
             out.append(t * self.iterations)
         return np.asarray(out)
 

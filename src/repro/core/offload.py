@@ -5,7 +5,7 @@ The action mu in (0, 1] is the fraction of the *computational workload*
 (FLOPs) kept on the device.  The Post-processor picks the OP whose cumulative
 FLOPs fraction is nearest; boundaries between OPs are the pairwise midpoints
 (paper §V-B: VGG-5 fractions 0.1/0.66/0.94/1.0 give boundaries
-0.38/0.79/0.96 — asserted in tests/test_offload.py).
+0.38/0.79/0.96 — asserted in tests/test_core.py).
 """
 from __future__ import annotations
 

@@ -50,6 +50,17 @@ def make_token_stream(n_tokens: int, vocab: int, seed: int = 0,
     return out
 
 
+def token_dataset(num_seqs: int, seq: int, vocab: int, seed: int = 0
+                  ) -> Dict[str, np.ndarray]:
+    """(tokens, next-token labels) rows cut from one synthetic stream, shaped
+    like ``make_cifar_like`` output so ``split_clients`` / the federated
+    loaders work unchanged for LM configs."""
+    stream = make_token_stream(num_seqs * (seq + 1), vocab, seed=seed)
+    rows = stream[:num_seqs * (seq + 1)].reshape(num_seqs, seq + 1)
+    return {"tokens": rows[:, :-1].astype(np.int32),
+            "labels": rows[:, 1:].astype(np.int32)}
+
+
 def split_clients(data: Dict[str, np.ndarray], num_clients: int
                   ) -> List[Dict[str, np.ndarray]]:
     n = len(next(iter(data.values())))

@@ -1,3 +1,14 @@
 from repro.fl.fedavg import fedavg, fedavg_delta, model_bytes  # noqa: F401
-from repro.fl.comm import Transport, constant_bandwidth, paper_schedule  # noqa: F401
+from repro.fl.comm import (  # noqa: F401
+    Transport,
+    constant_bandwidth,
+    device_bandwidths,
+    paper_schedule,
+)
+from repro.fl.planner import (  # noqa: F401
+    FedAdaptPlanner,
+    GreedyPlanner,
+    Planner,
+    StaticPlanner,
+)
 from repro.fl.loop import FLConfig, run_federated  # noqa: F401

@@ -34,6 +34,12 @@ def constant_bandwidth(bps: float) -> BandwidthFn:
     return lambda r, d: bps
 
 
+def device_bandwidths(devices) -> BandwidthFn:
+    """Per-device constant bandwidths from ``costmodel.DeviceProfile``s."""
+    bps = [d.bandwidth_bps for d in devices]
+    return lambda r, d: bps[d]
+
+
 def paper_schedule(base_bps: float = 75e6, low_bps: float = 10e6,
                    start_round: int = 50, slot_len: int = 10) -> BandwidthFn:
     """Paper §V-D: rounds [start, start+5*slot_len) are divided into 5 slots;

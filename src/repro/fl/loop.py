@@ -1,10 +1,20 @@
 """Federated round loops: classic FL, SplitFed (static OP), and FedAdapt.
 
-The model updates are *real* JAX training (VGG on synthetic CIFAR, through
-the actual split execution path ``models.vgg.split_loss`` so the offloading
-cut is exercised); the round *times* come from the Eq. 1 cost model (paper-
-calibrated device speeds) — matching how this CPU-only container can be
-faithful to a physical testbed.
+Generic over every registered config: the model side is a
+``models.split_program.SplitProgram`` (VGG, dense/moe/vlm, ssm, hybrid,
+encdec all train through the same offloading-point execution path), the
+planning side a ``fl.planner.Planner`` (static OP, the paper's RL
+controller, or the bandwidth-greedy heuristic).
+
+The model updates are *real* JAX training through the actual split execution
+path so the offloading cut is exercised; the round *times* come from the
+Eq. 1 cost model (paper-calibrated device speeds) — matching how this
+CPU-only container can be faithful to a physical testbed.  When a
+``fl.comm.Transport`` is supplied, communication time is accounted through
+it instead of Eq. 1's built-in network term: cut activations (optionally
+int8-quantized via kernels/quant_transfer, which also shrinks the modelled
+bytes) and the per-round weight delta sync (optionally top-k sparsified via
+kernels/topk_compress) both flow through ``Transport.transfer_time``.
 
 Fault tolerance is first-class: deadline straggler drops, failure injection,
 atomic checkpoints with bitwise resume, and elastic membership (all drilled
@@ -21,12 +31,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.configs.vgg import VGGConfig
 from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
 from repro.data.loader import ClientLoader
-from repro.fl.fedavg import fedavg_delta
-from repro.models import vgg as vgg_model
+from repro.fl.comm import Transport
+from repro.fl.fedavg import fedavg_delta, model_bytes
+from repro.fl.planner import FedAdaptPlanner, Planner, StaticPlanner
+from repro.models.split_program import SplitProgram, get_split_program
 from repro.runtime.failures import FailureInjector
 from repro.runtime.straggler import deadline_mask, reweight
 
@@ -44,40 +55,84 @@ class FLConfig:
     deadline_factor: float = 0.0     # >0 enables straggler drop
     fail_prob: float = 0.0
     augment: bool = True             # horizontal flip p=0.5 (paper §V-B)
+    quantize_transfer: bool = False  # int8 smashed data across the cut
+    delta_density: float = 1.0       # <1: top-k sparsified weight deltas
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
 
 
-def _make_local_step(cfg: VGGConfig):
+def _make_local_step(program: SplitProgram, quantize: bool):
     @partial(jax.jit, static_argnames=("op",))
-    def step(params, images, labels, lr, op):
+    def step(params, batch, lr, op):
         loss, grads = jax.value_and_grad(
-            lambda p: vgg_model.split_loss(
-                cfg, p, {"images": images, "labels": labels}, op))(params)
+            lambda p: program.loss_through_cut(p, batch, op,
+                                               quantize=quantize))(params)
         new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
         return new, loss
     return step
 
 
+def _resolve_planner(
+    fl: FLConfig,
+    native_op: int,
+    planner: Optional[Planner],
+    controller: Optional[FedAdaptController],
+    sim: Optional[SimulatedCluster],
+) -> Planner:
+    if planner is not None:
+        return planner
+    if fl.mode == "fedadapt" and controller is not None and sim is not None:
+        return FedAdaptPlanner(controller, explore=False)
+    if fl.mode == "sfl":
+        return StaticPlanner(fl.static_op if fl.static_op is not None
+                             else native_op)
+    return StaticPlanner(native_op)
+
+
+def _compress_deltas(params, client_params, errors, idxs, density: float):
+    """Top-k sparsify each client's weight delta with per-client error
+    feedback (the residual is re-added next round — Stich et al., the
+    property that keeps FedAvg convergence under sparsification)."""
+    from repro.kernels.topk_compress.ops import compress_tree
+    out = []
+    for k, cp in zip(idxs, client_params):
+        delta = jax.tree_util.tree_map(lambda c, g: c - g, cp, params)
+        comp, errors[k] = compress_tree(delta, errors[k], density=density)
+        out.append(jax.tree_util.tree_map(lambda g, d: g + d, params, comp))
+    return out
+
+
 def run_federated(
-    cfg: VGGConfig,
+    cfg,
     clients_data: List[Dict[str, np.ndarray]],
     test_data: Dict[str, np.ndarray],
     fl: FLConfig,
     sim: Optional[SimulatedCluster] = None,
     controller: Optional[FedAdaptController] = None,
     resume: bool = False,
+    planner: Optional[Planner] = None,
+    transport: Optional[Transport] = None,
 ) -> Dict[str, np.ndarray]:
-    """Returns history: accuracy, per-round max time, per-device times, ops."""
+    """Train any registered config federated with per-round offloading.
+
+    ``cfg`` is a ``VGGConfig`` or any ``ModelConfig`` family with a
+    registered ``SplitProgram``.  Returns history: per-round eval metric
+    (``accuracy``: classification accuracy for VGG, -CE loss for LMs),
+    round/comm times, per-device OPs, drop counts.
+    """
+    program = get_split_program(cfg)
     K = len(clients_data)
-    params = vgg_model.init(cfg, jax.random.PRNGKey(fl.seed))
-    local_step = _make_local_step(cfg)
+    params = program.init(jax.random.PRNGKey(fl.seed))
+    local_step = _make_local_step(program, fl.quantize_transfer)
     loaders = [ClientLoader(d, fl.batch_size, seed=fl.seed + i)
                for i, d in enumerate(clients_data)]
     injector = FailureInjector(fl.fail_prob, seed=fl.seed)
-    n_layers = len(cfg.layers)
+    native_op = program.native_op
+    seq = (clients_data[0]["tokens"].shape[1]
+           if "tokens" in clients_data[0] else None)
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
+    delta_errors: List = [None] * K        # per-client error feedback state
 
     mgr = None
     start_round = 0
@@ -95,27 +150,56 @@ def run_federated(
                     for _ in range(start_round * fl.local_iters):
                         ld.next_batch()
 
+    # --- round time accounting -------------------------------------------
+    def comm_times(ops: List[int], round_idx: int) -> np.ndarray:
+        """Per-device comm time through the Transport: per-iteration cut
+        round-trips (acts out, grads back) + one weight-delta sync.  The
+        iteration count follows the sim's notion of a round when present so
+        compute and comm stay on the same clock."""
+        assert transport is not None
+        iters = sim.iterations if sim is not None else fl.local_iters
+        mb = float(model_bytes(params))
+        out = []
+        for k, op in enumerate(ops):
+            t = 0.0
+            if op < native_op:
+                up = program.cut_bytes(op, fl.batch_size, seq,
+                                       quantize=fl.quantize_transfer)
+                down = program.cut_bytes(op, fl.batch_size, seq)
+                t += iters * transport.round_comm_time(
+                    up, down, round_idx, k)
+            t += transport.round_comm_time(mb * fl.delta_density, mb,
+                                           round_idx, k)
+            out.append(t)
+        return np.asarray(out)
+
+    def round_times(ops: List[int], round_idx: int) -> np.ndarray:
+        if transport is not None:
+            comm = comm_times(ops, round_idx)
+            comp = (sim.round_compute_times(ops, round_idx)
+                    if sim is not None else np.zeros(K))
+            return comp + comm, comm
+        if sim is not None:
+            return sim.round_times(ops, round_idx), np.zeros(K)
+        return np.ones(K), np.zeros(K)
+
     # round-0 baselines (classic FL, no offloading)
-    times = (sim.round_times([n_layers] * K, 0) if sim is not None
-             else np.ones(K))
+    times, _ = round_times([native_op] * K, 0)
     if controller is not None and controller.baselines is None:
         controller.begin(times)
+    plan = _resolve_planner(fl, native_op, planner, controller, sim)
+    plan.begin(times)
 
     hist: Dict[str, list] = {"accuracy": [], "round_time": [], "ops": [],
-                             "times": [], "dropped": []}
-    acc_fn = jax.jit(lambda p, im, lb: vgg_model.accuracy(
-        cfg, p, {"images": im, "labels": lb}))
+                             "times": [], "comm_time": [], "dropped": []}
+    eval_fn = jax.jit(lambda p, b: program.eval_metric(p, b))
+    test_batch = {k: jnp.asarray(v) for k, v in test_data.items()}
 
     for r in range(start_round, fl.rounds):
         lr = fl.lr * (fl.lr_drop_factor if r >= fl.lr_drop_round else 1.0)
         # --- plan offloading for this round --------------------------------
-        if fl.mode == "fedadapt" and controller is not None and sim is not None:
-            plan = controller.plan(times, sim.bandwidths(r), explore=False)
-            ops = plan.ops
-        elif fl.mode == "sfl":
-            ops = [fl.static_op if fl.static_op is not None else n_layers] * K
-        else:
-            ops = [n_layers] * K
+        bandwidths = sim.bandwidths(r) if sim is not None else None
+        ops = plan.plan(r, times, bandwidths)
         # --- local training -------------------------------------------------
         alive = injector.round_mask(K)
         client_params: List = []
@@ -125,43 +209,44 @@ def run_federated(
             p_k = params
             for it in range(fl.local_iters):
                 batch = loaders[k].next_batch()
-                images = batch["images"]
-                if fl.augment:
+                if fl.augment and "images" in batch:
                     # stateless per-(round, client, iter) flip rng so a
                     # resumed run reproduces the same augmentations
+                    images = batch["images"]
                     flip_rng = np.random.RandomState(
                         (fl.seed * 1_000_003 + r * 1009 + k * 31 + it)
                         % (2 ** 31))
                     flip = flip_rng.rand(len(images)) < 0.5
-                    images = np.where(flip[:, None, None, None],
-                                      images[:, :, ::-1, :], images)
-                p_k, _ = local_step(p_k, jnp.asarray(images),
-                                    jnp.asarray(batch["labels"]),
-                                    jnp.float32(lr), ops[k])
+                    batch["images"] = np.where(flip[:, None, None, None],
+                                               images[:, :, ::-1, :], images)
+                jbatch = {key: jnp.asarray(v) for key, v in batch.items()}
+                p_k, _ = local_step(p_k, jbatch, jnp.float32(lr), ops[k])
             client_params.append(p_k)
         # --- timing + straggler handling ------------------------------------
-        if sim is not None:
-            times = sim.round_times(ops, r)
+        times, comm = round_times(ops, r)
         keep = np.ones(K, bool)
         if fl.deadline_factor > 0:
             keep = deadline_mask(times, fl.deadline_factor)
         keep &= alive
         weights = reweight(sizes, keep)
+        surv_idx = [k for k in np.flatnonzero(alive) if keep[k]]
         survivors = [cp for k, cp in zip(np.flatnonzero(alive), client_params)
                      if keep[k]]
-        surv_w = [weights[k] for k in np.flatnonzero(alive) if keep[k]]
+        surv_w = [weights[k] for k in surv_idx]
         if survivors:
+            if fl.delta_density < 1.0:
+                survivors = _compress_deltas(params, survivors, delta_errors,
+                                             surv_idx, fl.delta_density)
             params = fedavg_delta(params, survivors, surv_w)
-        if controller is not None and fl.mode == "fedadapt":
-            controller.feedback(times)
+        plan.feedback(times)
         # --- evaluation + checkpoint ----------------------------------------
-        acc = float(acc_fn(params, jnp.asarray(test_data["images"]),
-                           jnp.asarray(test_data["labels"])))
+        acc = float(eval_fn(params, test_batch))
         hist["accuracy"].append(acc)
         hist["round_time"].append(float(np.max(times[keep]))
                                   if keep.any() else float(np.max(times)))
         hist["ops"].append(list(ops))
         hist["times"].append(times.copy())
+        hist["comm_time"].append(comm.copy())
         hist["dropped"].append(int(K - keep.sum()))
         if mgr is not None and fl.checkpoint_every and \
                 (r + 1) % fl.checkpoint_every == 0:

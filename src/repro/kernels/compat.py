@@ -1,0 +1,14 @@
+"""Version-compat shims for the Pallas TPU API.
+
+jax renamed ``pltpu.CompilerParams`` to ``pltpu.TPUCompilerParams`` (and
+newer releases are renaming it back); kernels import ``CompilerParams``
+from here so both spellings of the installed jax work unchanged.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+if hasattr(pltpu, "TPUCompilerParams"):
+    CompilerParams = pltpu.TPUCompilerParams
+else:
+    CompilerParams = pltpu.CompilerParams

@@ -11,7 +11,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 
 def _quant_kernel(x_ref, q_ref, s_ref):
@@ -43,7 +43,7 @@ def quantize_pallas(x: jnp.ndarray, block_rows: int = 256,
                    pl.BlockSpec((br,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((R, C), jnp.int8),
                    jax.ShapeDtypeStruct((R,), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x)
@@ -62,7 +62,7 @@ def dequantize_pallas(q: jnp.ndarray, scales: jnp.ndarray,
                   pl.BlockSpec((br,), lambda i: (i,))],
         out_specs=pl.BlockSpec((br, C), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((R, C), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(q, scales)

@@ -18,7 +18,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.kernels.compat import CompilerParams
 
 
 def _topk_kernel(x_ref, o_ref, *, k: int):
@@ -55,7 +55,7 @@ def topk_compress_pallas(x: jnp.ndarray, k: int, block: int = 1024,
         in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(x.reshape(nb, block))

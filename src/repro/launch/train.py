@@ -2,9 +2,11 @@
 
 Trains a real LM with the full FedAdapt stack: K heterogeneous client
 slices, PPO controller choosing per-group Offloading Points each round,
-split execution through ``models.split.split_loss`` (optionally int8
+split execution through the ``SplitProgram`` API (optionally int8
 smashed-data), FedAvg aggregation, straggler deadlines, failure injection
-and checkpoint/resume.
+and checkpoint/resume.  Model-agnostic: any arch with a registered
+``SplitProgram`` trains through the same driver (``--arch mamba2-780m-smoke``
+runs the attention-free SSM family).
 
     PYTHONPATH=src python -m repro.launch.train --arch lm100m --rounds 40 \\
         --local-steps 5 --batch 2 --seq 64 --ckpt-dir /tmp/fedadapt_lm
@@ -30,8 +32,7 @@ from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
 from repro.data.synthetic import batch_tokens, make_token_stream
 from repro.fl.fedavg import fedavg_delta
-from repro.models import split as split_mod
-from repro.models import transformer as T
+from repro.models.split_program import get_split_program
 from repro.optim import adamw, cosine
 from repro.runtime.failures import FailureInjector
 from repro.runtime.straggler import deadline_mask, reweight
@@ -51,9 +52,20 @@ def make_client_profiles(k: int):
     return profs
 
 
+def resolve_arch(name: str):
+    if name in SMALL_CONFIGS:
+        return SMALL_CONFIGS[name]
+    # "<registry-arch>-smoke" trains the family's smoke config — the driver
+    # is generic over every registered SplitProgram family
+    from repro.configs import get_smoke_config
+    return get_smoke_config(name[: -len("-smoke")])
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="lm16m", choices=list(SMALL_CONFIGS))
+    ap.add_argument("--arch", default="lm16m",
+                    choices=list(SMALL_CONFIGS) + ["mamba2-780m-smoke",
+                                                   "llama3-8b-smoke"])
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--local-steps", type=int, default=5)
     ap.add_argument("--batch", type=int, default=2)
@@ -71,13 +83,14 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    cfg = SMALL_CONFIGS[args.arch]
+    cfg = resolve_arch(args.arch)
+    program = get_split_program(cfg)
     K = args.clients
     print(f"# FedAdapt LM training: {cfg.name} "
           f"({cfg.param_count()/1e6:.0f}M params), K={K} clients, "
           f"mode={args.mode}", flush=True)
 
-    params = T.init(cfg, jax.random.PRNGKey(args.seed))
+    params = program.init(jax.random.PRNGKey(args.seed))
     opt = adamw(schedule=cosine(args.lr, args.rounds * args.local_steps,
                                 warmup_steps=20))
     opt_state = opt.init(params)
@@ -88,17 +101,18 @@ def main(argv=None):
     @partial(jax.jit, static_argnames=("op", "quant"))
     def local_step(p, o, tokens, labels, op, quant):
         loss, grads = jax.value_and_grad(
-            lambda q: split_mod.split_loss(
-                cfg, q, {"tokens": tokens, "labels": labels}, op,
+            lambda q: program.loss_through_cut(
+                q, {"tokens": tokens, "labels": labels}, op,
                 quantize=quant))(p)
         p, o = opt.update(p, grads, o)
         return p, o, loss
 
     # --- FedAdapt controller over the cost model -------------------------
-    workload = cm.lm_workload(cfg, args.batch, args.seq)
-    op_candidates = list(range(0, cfg.num_layers + 1, 2)) \
-        + ([cfg.num_layers] if cfg.num_layers % 2 else [])
-    op_candidates = sorted(set(op_candidates))
+    # bf16-on-the-wire cut bytes, matching the previous lm_workload model
+    workload = cm.program_workload(program, args.batch, args.seq,
+                                   bytes_per_el=2)
+    native = program.native_op
+    op_candidates = sorted(set(list(range(0, native + 1, 2)) + [native]))
     devices = make_client_profiles(K)
     server_flops = cm.slice_profile("server", chips=64, mfu=0.5).flops_per_s
     sim = SimulatedCluster(workload, devices, server_flops, op_candidates,

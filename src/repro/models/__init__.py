@@ -1,1 +1,5 @@
 from repro.models import api, layers, split, vgg  # noqa: F401
+from repro.models.split_program import (  # noqa: F401
+    SplitProgram,
+    get_split_program,
+)

@@ -76,6 +76,17 @@ def suffix_forward(cfg: ModelConfig, params: Params, acts: jnp.ndarray,
     return L.rms_norm(x, params["final_norm"])
 
 
+def suffix_loss(cfg: ModelConfig, params: Params, acts: jnp.ndarray,
+                labels: jnp.ndarray, op: int) -> jnp.ndarray:
+    """Server-side stage ending in the loss: layers [op, L) + norm + CE."""
+    if cfg.family == "vlm":
+        pad = -jnp.ones((labels.shape[0], cfg.num_patches), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    hidden = suffix_forward(cfg, params, acts, op)
+    return L.chunked_ce_loss(hidden, T.unembed_matrix(cfg, params), labels,
+                             cfg.logit_softcap)
+
+
 def split_loss(cfg: ModelConfig, params: Params, batch, op: int,
                quantize: bool = False) -> jnp.ndarray:
     """End-to-end loss through the cut (differentiable through the transfer)."""
@@ -84,13 +95,7 @@ def split_loss(cfg: ModelConfig, params: Params, batch, op: int,
     if quantize:
         from repro.kernels.quant_transfer import ops as qops
         acts = qops.fake_quant_int8(acts)   # straight-through int8 transfer
-    labels = batch["labels"]
-    if cfg.family == "vlm":
-        pad = -jnp.ones((labels.shape[0], cfg.num_patches), labels.dtype)
-        labels = jnp.concatenate([pad, labels], axis=1)
-    hidden = suffix_forward(cfg, params, acts, op)
-    return L.chunked_ce_loss(hidden, T.unembed_matrix(cfg, params), labels,
-                             cfg.logit_softcap)
+    return suffix_loss(cfg, params, acts, batch["labels"], op)
 
 
 def cut_bytes(cfg: ModelConfig, batch: int, seq: int,

@@ -1,0 +1,416 @@
+"""`SplitProgram`: one abstraction for offloading-point execution.
+
+FedAdapt's core mechanism — run split units [0, op) on the device, ship the
+cut activation ("smashed data"), run [op, U) on the server — used to exist
+once for VGG (``models/vgg.py``) and once for the LM zoo
+(``models/split.py``), with the federated loop hard-wired to the VGG path.
+A ``SplitProgram`` packages both behind a single protocol so ``fl/loop.py``,
+the planners and the cost model are generic over every registered config:
+
+    program = get_split_program(cfg)        # VGGConfig or any ModelConfig
+    params  = program.init(key, dtype)
+    acts    = program.client_forward(params, batch, op)    # device stage
+    loss    = program.server_forward(params, acts, batch, op)
+    loss    = program.loss_through_cut(params, batch, op, quantize=True)
+    program.num_boundaries                  # OP candidates: 0 .. U
+    program.layer_flops(batch, seq)         # fwd FLOPs per split unit
+    program.cut_bytes(op, batch, seq)       # L(mu) of Eq. 1, one way
+
+A "split unit" is whatever granularity the architecture cuts at: a layer for
+VGG and the scan-stacked families (dense/moe/vlm/ssm/encdec), a super-block
+of ``len(layer_pattern)`` layers for the hybrid (RecurrentGemma) family
+whose mixed param structures share one scan.  ``op == num_boundaries - 1``
+is device-native execution (classic FL, nothing crosses the network).
+
+``quantize=True`` routes the cut through the int8 smashed-data compressor
+(kernels/quant_transfer) with a straight-through gradient — the byte
+accounting in ``cut_bytes(..., quantize=True)`` shrinks to match.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.vgg import VGGConfig
+from repro.models import encdec as encdec_model
+from repro.models import hybrid as hybrid_model
+from repro.models import layers as L
+from repro.models import split as lm_split
+from repro.models import ssm as ssm_model
+from repro.models import transformer as T
+from repro.models import vgg as vgg_model
+from repro.parallel.sharding import shard
+
+Params = Any
+
+
+def _fake_quant(acts):
+    """Straight-through int8 quant of every tensor in the cut payload."""
+    from repro.kernels.quant_transfer import ops as qops
+    return jax.tree_util.tree_map(qops.fake_quant_int8, acts)
+
+
+class SplitProgram:
+    """Base protocol; subclasses adapt one model family."""
+
+    family: str = ""
+
+    def __init__(self, cfg):
+        self.cfg = cfg
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def init(self, key, dtype=jnp.float32) -> Params:
+        raise NotImplementedError
+
+    def client_forward(self, params: Params, batch: Dict, op: int):
+        """Device stage: inputs -> cut payload (a pytree of arrays)."""
+        raise NotImplementedError
+
+    def server_forward(self, params: Params, acts, batch: Dict,
+                       op: int) -> jnp.ndarray:
+        """Server stage: cut payload -> scalar training loss."""
+        raise NotImplementedError
+
+    def loss_through_cut(self, params: Params, batch: Dict, op: int,
+                         quantize: bool = False) -> jnp.ndarray:
+        """End-to-end loss, differentiable through the (optionally int8)
+        transfer.  ``op == native_op`` never quantizes: nothing is shipped."""
+        acts = self.client_forward(params, batch, op)
+        if quantize and op < self.native_op:
+            acts = _fake_quant(acts)
+        return self.server_forward(params, acts, batch, op)
+
+    def eval_metric(self, params: Params, batch: Dict) -> jnp.ndarray:
+        """Higher-is-better scalar (accuracy for VGG, -CE loss for LMs)."""
+        return -self.loss_through_cut(params, batch, self.native_op)
+
+    # ------------------------------------------------------------------
+    # cost-model hooks (Eq. 1)
+    # ------------------------------------------------------------------
+    @property
+    def num_boundaries(self) -> int:
+        """OP candidates 0..U (0 = all-server, U = device-native)."""
+        raise NotImplementedError
+
+    @property
+    def native_op(self) -> int:
+        return self.num_boundaries - 1
+
+    def layer_flops(self, batch: int, seq: Optional[int] = None) -> np.ndarray:
+        """Forward FLOPs per split unit for one iteration (one batch)."""
+        raise NotImplementedError
+
+    def cut_bytes(self, op: int, batch: int, seq: Optional[int] = None,
+                  bytes_per_el: int = 4, quantize: bool = False) -> float:
+        """L(mu): bytes crossing the cut at ``op``, one way, per iteration
+        (the backward pass ships the same-shaped gradient; caller doubles)."""
+        raise NotImplementedError
+
+    def op_candidates(self) -> List[int]:
+        """Default OP grid for planners (architectures may restrict it)."""
+        return list(range(self.num_boundaries))
+
+
+# =============================================================================
+# VGG (the paper's own models)
+# =============================================================================
+class VGGSplitProgram(SplitProgram):
+    family = "vgg"
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        return vgg_model.init(self.cfg, key, dtype)
+
+    def client_forward(self, params, batch, op):
+        return vgg_model.apply_range(self.cfg, params, batch["images"], 0, op)
+
+    def server_forward(self, params, acts, batch, op):
+        logits = vgg_model.apply_range(self.cfg, params, acts, op,
+                                       len(self.cfg.layers))
+        logits = logits.astype(jnp.float32)
+        labels = batch["labels"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(lse - gold)
+
+    def eval_metric(self, params, batch):
+        return vgg_model.accuracy(self.cfg, params, batch)
+
+    @property
+    def num_boundaries(self) -> int:
+        return len(self.cfg.layers) + 1
+
+    def layer_flops(self, batch, seq=None) -> np.ndarray:
+        return np.asarray(vgg_model.layer_flops(self.cfg), np.float64) * batch
+
+    def cut_bytes(self, op, batch, seq=None, bytes_per_el=4, quantize=False):
+        if op >= self.native_op:
+            return 0.0
+        per = 1 if quantize else bytes_per_el
+        if op == 0:
+            return float(batch * self.cfg.input_hw ** 2 * self.cfg.input_ch
+                         * per)
+        return vgg_model.activation_bytes(self.cfg, op - 1, per) * batch
+
+    def op_candidates(self) -> List[int]:
+        return list(self.cfg.ops)
+
+
+# =============================================================================
+# dense / MoE / VLM transformers (via models/split.py)
+# =============================================================================
+class LMSplitProgram(SplitProgram):
+    family = "lm"
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        return T.init(self.cfg, key, dtype)
+
+    def client_forward(self, params, batch, op):
+        return lm_split.prefix_forward(self.cfg, params, batch["tokens"], op,
+                                       batch.get("patches"))
+
+    def server_forward(self, params, acts, batch, op):
+        return lm_split.suffix_loss(self.cfg, params, acts, batch["labels"],
+                                    op)
+
+    @property
+    def num_boundaries(self) -> int:
+        return self.cfg.num_layers + 1
+
+    def _eff_seq(self, seq: int) -> int:
+        return seq + (self.cfg.num_patches if self.cfg.family == "vlm" else 0)
+
+    def layer_flops(self, batch, seq=None) -> np.ndarray:
+        from repro.core import costmodel as cm
+        assert seq is not None, "LM split programs need the sequence length"
+        return cm.lm_layer_flops(self.cfg, self._eff_seq(seq)) * batch
+
+    def cut_bytes(self, op, batch, seq=None, bytes_per_el=4, quantize=False):
+        if op >= self.native_op:
+            return 0.0
+        assert seq is not None, "LM split programs need the sequence length"
+        per = 1 if quantize else bytes_per_el
+        return float(batch * self._eff_seq(seq) * self.cfg.d_model * per)
+
+
+# =============================================================================
+# SSM (Mamba-2): same stacked-scan cut, attention-free block
+# =============================================================================
+class SSMSplitProgram(LMSplitProgram):
+    family = "ssm"
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        return ssm_model.init(self.cfg, key, dtype)
+
+    def _stage(self, params, x, start, stop):
+        sub = jax.tree_util.tree_map(lambda a: a[start:stop],
+                                     params["layers"])
+
+        def body(x, p):
+            return ssm_model.block(self.cfg, p, x), None
+
+        body_fn = jax.checkpoint(body) if self.cfg.remat else body
+        x, _ = L.scan(body_fn, x, sub)
+        return x
+
+    def client_forward(self, params, batch, op):
+        x = shard(params["embed"][batch["tokens"]], ("batch", "seq", "none"))
+        if op == 0:
+            return x
+        return self._stage(params, x, 0, op)
+
+    def server_forward(self, params, acts, batch, op):
+        x = acts
+        if op < self.cfg.num_layers:
+            x = self._stage(params, x, op, self.cfg.num_layers)
+        hidden = L.rms_norm(x, params["final_norm"])
+        return L.chunked_ce_loss(hidden, params["unembed"], batch["labels"])
+
+
+# =============================================================================
+# hybrid (RecurrentGemma): cut at super-block granularity
+# =============================================================================
+class HybridSplitProgram(LMSplitProgram):
+    """Layers with mixed param structures share one scan over super-blocks of
+    ``len(cfg.layer_pattern)`` layers, so the cut lands between super-blocks.
+    The remainder layers (38 = 12*3 + 2) ride with the last unit: they run on
+    the device only at the native OP, on the server otherwise."""
+
+    family = "hybrid"
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        return hybrid_model.init(self.cfg, key, dtype)
+
+    def _groups(self) -> int:
+        return hybrid_model._pattern_info(self.cfg)[0]
+
+    def _embed(self, params, tokens):
+        x = params["embed"][tokens] * math.sqrt(self.cfg.d_model)
+        return shard(x.astype(params["embed"].dtype),
+                     ("batch", "seq", "none"))
+
+    def _stage(self, params, x, positions, start, stop):
+        slots = tuple(
+            jax.tree_util.tree_map(lambda a: a[start:stop], slot)
+            for slot in params["layers"]["slots"])
+
+        def body(x, slot_params):
+            for s, kind in enumerate(self.cfg.layer_pattern):
+                x, _ = hybrid_model.apply_block(self.cfg, kind,
+                                                slot_params[s], x, positions)
+            return x, None
+
+        body_fn = jax.checkpoint(body) if self.cfg.remat else body
+        x, _ = L.scan(body_fn, x, slots)
+        return x
+
+    def client_forward(self, params, batch, op):
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        if op == 0:
+            return x
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+        return self._stage(params, x, positions, 0, op)
+
+    def server_forward(self, params, acts, batch, op):
+        x = acts
+        positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+        if op < self._groups():
+            x = self._stage(params, x, positions, op, self._groups())
+        for i, p in enumerate(params["rem"]):
+            x, _ = hybrid_model.apply_block(
+                self.cfg, self.cfg.layer_pattern[i], p, x, positions)
+        hidden = L.rms_norm(x, params["final_norm"])
+        return L.chunked_ce_loss(hidden,
+                                 hybrid_model.unembed_matrix(self.cfg, params),
+                                 batch["labels"], self.cfg.logit_softcap)
+
+    @property
+    def num_boundaries(self) -> int:
+        return self._groups() + 1
+
+    def layer_flops(self, batch, seq=None) -> np.ndarray:
+        from repro.core import costmodel as cm
+        assert seq is not None, "LM split programs need the sequence length"
+        per_layer = cm.lm_layer_flops(self.cfg, seq) * batch
+        P = len(self.cfg.layer_pattern)
+        G = self._groups()
+        units = [per_layer[g * P:(g + 1) * P].sum() for g in range(G)]
+        units[-1] += per_layer[G * P:].sum()    # remainder rides the last unit
+        return np.asarray(units, np.float64)
+
+
+# =============================================================================
+# enc-dec (Whisper): encoder is the on-device frontend, cut in the decoder
+# =============================================================================
+class EncDecSplitProgram(LMSplitProgram):
+    """The encoder is the modality frontend and always runs on the device
+    (like the paper's sensor-side preprocessing); the cut moves through the
+    decoder stack.  The payload is (decoder acts, encoder output) because the
+    server-side cross-attention needs ``enc_out``."""
+
+    family = "encdec"
+
+    def init(self, key, dtype=jnp.float32) -> Params:
+        return encdec_model.init(self.cfg, key, dtype)
+
+    def _stage(self, params, x, enc_out, positions, start, stop):
+        sub = jax.tree_util.tree_map(lambda a: a[start:stop],
+                                     params["layers"])
+
+        def body(x, p):
+            h = L.rms_norm(x, p["ln1"])
+            attn_out, _ = L.attention_block(self.cfg, p["attn"], h, positions,
+                                            window=0)
+            x = x + attn_out
+            hx = L.rms_norm(x, p["ln_x"])
+            ek, ev = encdec_model._enc_kv(self.cfg, p["cross"], enc_out)
+            x = x + encdec_model._cross_attend(self.cfg, p["cross"], hx, ek,
+                                               ev)
+            x = x + L.ffn(p["ffn"], L.rms_norm(x, p["ln2"]), self.cfg.mlp_act)
+            return shard(x, ("batch", "seq", "none")), None
+
+        body_fn = jax.checkpoint(body) if self.cfg.remat else body
+        x, _ = L.scan(body_fn, x, sub)
+        return x
+
+    def client_forward(self, params, batch, op):
+        enc_out = encdec_model.encode(self.cfg, params, batch["frames"])
+        x = shard(params["embed"][batch["tokens"]], ("batch", "seq", "none"))
+        if op > 0:
+            positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+            x = self._stage(params, x, enc_out, positions, 0, op)
+        return (x, enc_out)
+
+    def server_forward(self, params, acts, batch, op):
+        x, enc_out = acts
+        if op < self.cfg.num_layers:
+            positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+            x = self._stage(params, x, enc_out, positions, op,
+                            self.cfg.num_layers)
+        hidden = L.rms_norm(x, params["final_norm"])
+        return L.chunked_ce_loss(hidden, params["unembed"], batch["labels"])
+
+    def layer_flops(self, batch, seq=None) -> np.ndarray:
+        assert seq is not None, "LM split programs need the sequence length"
+        cfg = self.cfg
+        S, Tn = seq, cfg.encoder_seq
+        n_mlp = 3 if cfg.mlp_act in ("swiglu", "geglu") else 2
+        ffn = 2.0 * S * n_mlp * cfg.d_model * cfg.d_ff
+        self_attn = (2.0 * S * cfg.d_model * (2 * cfg.q_dim + 2 * cfg.kv_dim)
+                     + 4.0 * S * S * cfg.q_dim)
+        cross = (2.0 * S * cfg.d_model * cfg.q_dim
+                 + 4.0 * Tn * cfg.d_model * cfg.kv_dim
+                 + 4.0 * S * Tn * cfg.q_dim
+                 + 2.0 * S * cfg.q_dim * cfg.d_model)
+        dec = self_attn + cross + ffn
+        enc_layer = (2.0 * Tn * cfg.d_model * (2 * cfg.q_dim + 2 * cfg.kv_dim)
+                     + 4.0 * Tn * Tn * cfg.q_dim
+                     + 2.0 * Tn * n_mlp * cfg.d_model * cfg.d_ff)
+        units = np.full(cfg.num_layers, dec, np.float64)
+        # the encoder frontend rides the first unit (it always runs on the
+        # device, so Eq. 1's device fraction is approximate at OP 0)
+        units[0] += cfg.encoder_layers * enc_layer
+        return units * batch
+
+    def cut_bytes(self, op, batch, seq=None, bytes_per_el=4, quantize=False):
+        if op >= self.native_op:
+            return 0.0
+        assert seq is not None, "LM split programs need the sequence length"
+        per = 1 if quantize else bytes_per_el
+        return float(batch * (seq + self.cfg.encoder_seq)
+                     * self.cfg.d_model * per)
+
+
+# =============================================================================
+# registry
+# =============================================================================
+_FAMILY_PROGRAMS = {
+    "dense": LMSplitProgram,
+    "moe": LMSplitProgram,
+    "vlm": LMSplitProgram,
+    "ssm": SSMSplitProgram,
+    "hybrid": HybridSplitProgram,
+    "encdec": EncDecSplitProgram,
+}
+
+
+def get_split_program(cfg) -> SplitProgram:
+    """Resolve the SplitProgram for a VGGConfig or any registered
+    ModelConfig family."""
+    if isinstance(cfg, VGGConfig):
+        return VGGSplitProgram(cfg)
+    if isinstance(cfg, ModelConfig):
+        try:
+            return _FAMILY_PROGRAMS[cfg.family](cfg)
+        except KeyError:
+            raise KeyError(
+                f"no SplitProgram for family {cfg.family!r}; known: "
+                f"{sorted(_FAMILY_PROGRAMS)}") from None
+    raise TypeError(f"unsupported config type {type(cfg).__name__}")

@@ -1,15 +1,26 @@
-"""FL substrate: FedAvg algebra, split/native parity, straggler handling,
-failure injection, transport accounting."""
+"""FL substrate: FedAvg algebra, SplitProgram split/native parity, straggler
+handling, failure injection, planner + transport accounting."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
+from repro.configs import get_smoke_config
+from repro.configs.lm_small import LM16M
 from repro.configs.vgg import VGG5
-from repro.data.synthetic import make_cifar_like, split_clients
+from repro.core import costmodel as cm
+from repro.core.env import SimulatedCluster
+from repro.data.synthetic import (
+    make_cifar_like,
+    split_clients,
+    token_dataset,
+)
 from repro.fl.comm import Transport, constant_bandwidth, paper_schedule
 from repro.fl.fedavg import fedavg, fedavg_delta, model_bytes
 from repro.fl.loop import FLConfig, run_federated
+from repro.fl.planner import GreedyPlanner, StaticPlanner
 from repro.models import vgg as vgg_model
+from repro.models.split_program import get_split_program
 from repro.runtime.failures import FailureInjector
 from repro.runtime.straggler import deadline_mask, reweight
 
@@ -114,3 +125,139 @@ def test_federated_training_learns_and_split_matches():
 def test_model_bytes():
     p = {"a": jnp.zeros((4, 4), jnp.float32), "b": jnp.zeros((2,), jnp.int8)}
     assert model_bytes(p) == 4 * 4 * 4 + 2
+
+
+# =============================================================================
+# SplitProgram API
+# =============================================================================
+def test_split_program_registry_and_cost_hooks():
+    prog = get_split_program(VGG5)
+    assert prog.num_boundaries == len(VGG5.layers) + 1
+    assert prog.op_candidates() == list(VGG5.ops)
+    for arch in ["llama3-8b", "mamba2-780m", "recurrentgemma-9b",
+                 "whisper-base"]:
+        p = get_split_program(get_smoke_config(arch))
+        fl = p.layer_flops(2, 16)
+        assert len(fl) == p.num_boundaries - 1 and (fl > 0).all()
+        assert p.cut_bytes(p.native_op, 2, 16) == 0.0       # native: no cut
+        assert p.cut_bytes(0, 2, 16) > 0.0
+        # int8 quantization shrinks the modelled payload 4x (fp32 cut)
+        assert p.cut_bytes(0, 2, 16, quantize=True) == \
+            pytest.approx(p.cut_bytes(0, 2, 16) / 4.0)
+    with pytest.raises(TypeError):
+        get_split_program(object())
+
+
+def test_split_program_loss_parity_every_family():
+    """loss_through_cut at any boundary == device-native loss, per family."""
+    for arch in ["llama3-8b", "mamba2-780m", "recurrentgemma-9b",
+                 "whisper-base"]:
+        cfg = get_smoke_config(arch)
+        prog = get_split_program(cfg)
+        params = prog.init(KEY, jnp.float32)
+        tokens = jax.random.randint(KEY, (2, 16), 0, cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": tokens}
+        if cfg.family == "encdec":
+            batch["frames"] = jax.random.normal(
+                KEY, (2, cfg.encoder_seq, cfg.d_model))
+        native = float(prog.loss_through_cut(params, batch, prog.native_op))
+        for op in {0, 1, prog.native_op}:
+            s = float(prog.loss_through_cut(params, batch, op))
+            assert abs(s - native) < 1e-4, (arch, op)
+
+
+def test_program_workload_matches_family_builders():
+    vw = cm.vgg_workload(VGG5, batch_size=100)
+    pw = cm.program_workload(get_split_program(VGG5), 100)
+    np.testing.assert_allclose(pw.layer_flops, vw.layer_flops)
+    np.testing.assert_allclose(pw.cut_bytes[:-1], vw.cut_bytes[:-1])
+    assert pw.cut_bytes[-1] == 0.0
+
+    cfg = get_smoke_config("llama3-8b")
+    lw = cm.lm_workload(cfg, 2, 16)
+    pw = cm.program_workload(get_split_program(cfg), 2, 16, bytes_per_el=2)
+    np.testing.assert_allclose(pw.layer_flops, lw.layer_flops)
+    np.testing.assert_allclose(pw.cut_bytes, lw.cut_bytes)
+
+
+# =============================================================================
+# model-agnostic federated loop + Transport accounting
+# =============================================================================
+def _lm_federated(cfg, op, rounds=3, iters=2, bs=4, lr=0.3, quantize=False,
+                  bw=50e6):
+    clients = split_clients(token_dataset(96, 32, cfg.vocab_size, seed=0), 2)
+    test = token_dataset(8, 32, cfg.vocab_size, seed=9)
+    fl = FLConfig(rounds=rounds, local_iters=iters, batch_size=bs, lr=lr,
+                  augment=False, quantize_transfer=quantize, mode="sfl",
+                  static_op=op)
+    return run_federated(cfg, clients, test, fl,
+                         transport=Transport(constant_bandwidth(bw)))
+
+
+def test_run_federated_dense_lm_with_quant_transport():
+    """lm_small trains through the same loop as VGG, with int8 smashed data;
+    comm time flows through fl/comm.Transport (exact byte accounting)."""
+    bw = 50e6
+    h = _lm_federated(LM16M, op=3, quantize=True, bw=bw)
+    assert h["accuracy"][-1] > h["accuracy"][0] + 0.1    # -CE loss improves
+    prog = get_split_program(LM16M)
+    up8 = prog.cut_bytes(3, 4, 32, quantize=True)
+    down = prog.cut_bytes(3, 4, 32)
+    mb = model_bytes(h["params"])
+    expected = 2 * (up8 + down) * 8.0 / bw + 2 * mb * 8.0 / bw
+    np.testing.assert_allclose(h["comm_time"][-1], expected, rtol=1e-9)
+    assert (h["comm_time"] > 0).all()
+
+
+def test_run_federated_ssm_through_same_api():
+    cfg = get_smoke_config("mamba2-780m")
+    h = _lm_federated(cfg, op=1, rounds=3, iters=3, bs=8, lr=0.5)
+    assert h["accuracy"][-1] > h["accuracy"][0] + 0.2
+    assert h["ops"].shape == (3, 2)
+
+
+def test_quantized_transport_cheaper_than_fp32():
+    cfg = get_smoke_config("mamba2-780m")
+    h32 = _lm_federated(cfg, op=1, rounds=1, iters=2, bs=8, lr=0.5)
+    h8 = _lm_federated(cfg, op=1, rounds=1, iters=2, bs=8, lr=0.5,
+                       quantize=True)
+    assert h8["comm_time"][-1].max() < h32["comm_time"][-1].max()
+
+
+def test_vgg_federated_with_transport_and_topk_deltas():
+    """The paper's VGG through the new loop: transport-accounted comm plus
+    top-k sparsified weight deltas still learn."""
+    data = make_cifar_like(240, seed=0)
+    test = make_cifar_like(80, seed=9)
+    clients = split_clients(data, 2)
+    fl = FLConfig(rounds=3, local_iters=3, batch_size=40, mode="sfl",
+                  static_op=2, augment=False, quantize_transfer=True,
+                  delta_density=0.25)
+    h = run_federated(VGG5, clients, test, fl,
+                      transport=Transport(constant_bandwidth(75e6)))
+    assert h["accuracy"][-1] > h["accuracy"][0]
+    assert (h["comm_time"] > 0).all()
+
+
+def test_greedy_planner_offloads_only_when_it_pays():
+    w = cm.vgg_workload(VGG5)
+    planner = GreedyPlanner(w, list(VGG5.ops),
+                            device_flops=[1e13, 1e8], server_flops=1e13)
+    ops = planner.plan(0, [1.0, 1.0], [75e6, 75e6])
+    assert ops[0] == VGG5.ops[-1]        # fast device: stay native
+    assert ops[1] < VGG5.ops[-1]         # slow device: offload
+    # starved link: shipping the cut costs more than computing locally
+    ops_slow = planner.plan(0, [1.0, 1.0], [75e6, 1e4])
+    assert ops_slow[1] == VGG5.ops[-1]
+    # no bandwidth info -> everyone native
+    assert planner.plan(0, [1.0, 1.0], None) == [7, 7]
+
+
+def test_static_planner_and_sim_compute_times():
+    w = cm.vgg_workload(VGG5)
+    devices = [cm.DeviceProfile(f"d{i}", 2e9, 75e6) for i in range(3)]
+    sim = SimulatedCluster(w, devices, 8e9, VGG5.ops, iterations=5)
+    comp = sim.round_compute_times([2, 2, 2], 0)
+    full = sim.round_times([2, 2, 2], 0)
+    assert (comp < full).all()           # comm term stripped
+    assert StaticPlanner(4).plan(0, [1.0] * 3, None) == [4, 4, 4]
