@@ -42,9 +42,13 @@ class Csv:
     def add(self, name: str, us_per_call: float, derived: str):
         self.rows.append((name, us_per_call, derived))
 
+    def format_row(self, i: int = -1) -> str:
+        name, us, derived = self.rows[i]
+        return f"{name},{us:.1f},{derived}"
+
     def emit(self):
-        for name, us, derived in self.rows:
-            print(f"{name},{us:.1f},{derived}")
+        for i in range(len(self.rows)):
+            print(self.format_row(i))
 
 
 def timed(fn, *args, repeats: int = 1, **kw):

@@ -1,0 +1,135 @@
+"""Fleet scaling: simulation throughput of the two local-training engines.
+
+The RL controller's whole point is fleet-scale re-planning (paper §IV), so
+the simulator's rounds/sec at large K is the number that gates every
+experiment.  This bench drives the fl/fleet.py engines directly — local
+training + FedAvg aggregation, no planner/eval — and reports steady-state
+rounds/sec (one warm-up round excluded, so compile time is not conflated
+with dispatch throughput) for K simulated clients:
+
+* ``sequential`` — K x local_iters jit dispatches per round (pre-fleet loop)
+* ``batched``    — one vmap-over-clients/scan-over-iters dispatch per round
+
+    PYTHONPATH=src python -m benchmarks.fleet_scaling             # full grid
+    PYTHONPATH=src python -m benchmarks.fleet_scaling --quick     # K <= 16
+    PYTHONPATH=src python -m benchmarks.fleet_scaling --clients 64 \
+        --models lm_small
+
+Output rows follow benchmarks/run.py: ``name,us_per_call,derived`` where
+``us_per_call`` is microseconds per simulated round and ``derived`` carries
+rounds/sec plus the batched-over-sequential speedup.
+
+Caveat (important for interpreting CPU numbers): the batched engine's
+per-client *weight gradients* lower to batched GEMMs / grouped convolutions
+with the client axis as the batch dimension.  Accelerator backends execute
+those as single large kernels — that, plus the K x local_iters -> 1
+dispatch reduction, is where the engine pays off.  XLA *CPU* executes them
+as a serial loop over clients (and grouped-conv backward falls off a
+cliff), so on few-core CPU hosts the measured speedup is bounded by how
+much of the step is shared-weight matmul work (modest for LMs, can invert
+for conv nets).  The equivalence guarantee is engine-independent either
+way (tests/test_fleet.py).
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, List
+
+import jax
+import numpy as np
+
+from benchmarks.common import Csv
+from repro.configs.lm_small import LM16M
+from repro.configs.vgg import VGG5
+from repro.data.loader import FleetLoader
+from repro.data.synthetic import make_cifar_like, split_clients, token_dataset
+from repro.fl.fedavg import fedavg_delta, fedavg_delta_stacked
+from repro.fl.fleet import StackedRows, get_engine, take_rows
+from repro.models.split_program import get_split_program
+
+MODELS: Dict[str, dict] = {
+    # IoT-sized local batches: fleet simulation is many small clients
+    "vgg": dict(cfg=VGG5, batch=8, op=2, lr=0.01, per_client=16, seq=None),
+    "lm_small": dict(cfg=LM16M, batch=2, op=3, lr=0.3, per_client=8,
+                     seq=16),
+}
+
+
+def _client_data(name: str, spec: dict, K: int) -> List[dict]:
+    n = K * spec["per_client"]
+    if name == "vgg":
+        return split_clients(make_cifar_like(n, seed=0), K)
+    return split_clients(token_dataset(n, spec["seq"],
+                                       spec["cfg"].vocab_size, seed=0), K)
+
+
+def _bench_engine(engine_name: str, spec: dict, clients: List[dict], K: int,
+                  rounds: int, iters: int) -> float:
+    """Seconds per round, steady state (aggregation included)."""
+    program = get_split_program(spec["cfg"])
+    params = program.init(jax.random.PRNGKey(0))
+    engine = get_engine(engine_name, program, iters, seed=0, augment=False,
+                        quantize=False)
+    loader = FleetLoader.for_clients(clients, spec["batch"], seed=0)
+    ops = [spec["op"]] * K
+    alive = list(range(K))
+
+    def one_round(r: int):
+        idxs, rows = engine.run_round(params, loader, ops, alive, r,
+                                      spec["lr"])
+        surv = take_rows(rows, list(range(len(idxs))))
+        if isinstance(surv, StackedRows):
+            new = fedavg_delta_stacked(params, surv.tree)
+        else:
+            new = fedavg_delta(params, surv)
+        jax.block_until_ready(new)
+
+    one_round(0)                           # warm-up: compile + caches
+    t0 = time.perf_counter()
+    for r in range(1, rounds + 1):
+        one_round(r)
+    return (time.perf_counter() - t0) / rounds
+
+
+def run(models: List[str], client_counts: List[int], rounds: int,
+        iters: int, engines=("sequential", "batched")) -> Csv:
+    csv = Csv()
+    for name in models:
+        spec = MODELS[name]
+        for K in client_counts:
+            clients = _client_data(name, spec, K)
+            secs = {eng: _bench_engine(eng, spec, clients, K, rounds, iters)
+                    for eng in engines}
+            for eng, s in secs.items():
+                extra = ""
+                if eng == "batched" and "sequential" in secs:
+                    speedup = secs["sequential"] / s
+                    extra = f"; speedup {speedup:.1f}x vs sequential"
+                csv.add(f"fleet/{name}/K{K}/{eng}", s * 1e6,
+                        f"{1.0 / s:.2f} rounds/s{extra}")
+                print(csv.format_row(), flush=True)
+    return csv
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--models", default="vgg,lm_small")
+    ap.add_argument("--clients", default="4,16,64,256")
+    ap.add_argument("--rounds", type=int, default=2,
+                    help="measured rounds per cell (after one warm-up)")
+    ap.add_argument("--iters", type=int, default=5,
+                    help="local iterations per round (paper's truncated 5)")
+    ap.add_argument("--quick", action="store_true", help="K <= 16 only")
+    ap.add_argument("--engines", default="sequential,batched",
+                    help="subset of engines (one cell per run of a big K)")
+    args = ap.parse_args()
+    ks = [int(k) for k in args.clients.split(",")]
+    if args.quick:
+        ks = [k for k in ks if k <= 16] or [4]
+    run(args.models.split(","), ks, args.rounds, args.iters,
+        tuple(args.engines.split(",")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,25 @@
-"""The paper's 5-device testbed, reconstructed from its own measurements.
+"""The paper's 5-device testbed (§V-A), reconstructed from its own
+measurements.
+
+The physical testbed is 1 Jetson Xavier + 2 Raspberry Pi 4 + 2 Raspberry
+Pi 3 against a desktop edge server, on a 75 Mbps link throttled with ``tc``.
+This module rebuilds it as Eq. 1 device/server speeds (``C_dev``/``C_srv``
+in FLOP/s, plus a constant per-iteration overhead in seconds) fitted to the
+paper's own tables:
+
+* ``TABLE_V`` / ``TABLE_VI`` — VGG-5 / VGG-8 single-device round times in
+  **seconds** per OP (columns OP1..OP4), keyed by bandwidth in **bits/s**
+  (the paper's 75/50/25/10 Mbps rows);
+* ``TABLE_VIII`` — per-device VGG-5 round times in seconds at 75 Mbps
+  (`pi4_15`/`pi4_07` are the paper's 1.5 GHz and throttled 0.7 GHz Pi 4s);
+* ``TABLE_VII_TIMES`` — the §V-B deployment's measured per-device times.
 
 Calibration: (C_srv, overhead) are fitted once from Table V (VGG-5 per-OP
 times at 75 Mbps — the single-device study against the edge server); each
 device's C_dev is then fitted from its Table VIII row *holding the server
 fixed* (all rows share that server).  Everything else — other bandwidths,
-VGG-8, the 5-device deployment — is out-of-sample prediction.
+VGG-8, the 5-device deployment — is out-of-sample prediction, validated
+against Tables V-IX in benchmarks/paper_validation.py.
 """
 from __future__ import annotations
 

@@ -3,4 +3,4 @@ from repro.data.synthetic import (  # noqa: F401
     make_token_stream,
     split_clients,
 )
-from repro.data.loader import ClientLoader  # noqa: F401
+from repro.data.loader import ClientLoader, FleetLoader  # noqa: F401

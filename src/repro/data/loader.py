@@ -1,8 +1,23 @@
 """Per-client batching with deterministic shuffling (resumable: the loader
-state is just (epoch, cursor), checkpointed alongside the model)."""
+state is just (epoch, cursor), checkpointed alongside the model).
+
+Two granularities:
+
+* ``ClientLoader`` — one client's stream.  Batch order is a pure function of
+  ``(seed, epoch, cursor)``, so fast-forwarding ``n`` draws (``skip``)
+  reproduces an uninterrupted run bitwise (the resume drill in
+  tests/test_runtime.py).
+* ``FleetLoader`` — a fleet of per-client streams behind one handle.
+  ``next_batches(k_indices)`` draws the *next* batch of each listed client
+  and stacks them into ``(G, B, ...)`` arrays for the batched fleet engine
+  (fl/fleet.py).  Each client's stream is the same ``ClientLoader`` stream
+  the sequential engine would draw — grouping clients differently across
+  rounds never changes what any single client sees, and ``state/restore``
+  keeps the bitwise-resume guarantee at fleet granularity.
+"""
 from __future__ import annotations
 
-from typing import Dict, Iterator, Tuple
+from typing import Dict, Iterator, List, Sequence, Tuple
 
 import numpy as np
 
@@ -37,6 +52,67 @@ class ClientLoader:
         self.cursor += self.batch_size
         return {k: v[idx] for k, v in self.data.items()}
 
+    def skip(self, n: int):
+        """Fast-forward ``n`` draws without materializing the batches."""
+        for _ in range(n):
+            if self.cursor + self.batch_size > self.n:
+                self.epoch += 1
+                self.cursor = 0
+            self.cursor += self.batch_size
+        self._perm = self._permutation(self.epoch)
+
     def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
         while True:
             yield self.next_batch()
+
+
+class FleetLoader:
+    """K deterministic per-client streams behind one batched handle."""
+
+    def __init__(self, loaders: Sequence[ClientLoader]):
+        self.loaders: List[ClientLoader] = list(loaders)
+        sizes = {ld.batch_size for ld in self.loaders}
+        if len(sizes) > 1:
+            raise ValueError(
+                f"FleetLoader needs a uniform batch size to stack clients; "
+                f"got {sorted(sizes)} (some client datasets are smaller than "
+                f"the requested batch size)")
+
+    @classmethod
+    def for_clients(cls, clients_data: Sequence[Dict[str, np.ndarray]],
+                    batch_size: int, seed: int = 0) -> "FleetLoader":
+        """One ``ClientLoader(seed + k)`` per client — the exact streams the
+        sequential federated loop has always used."""
+        return cls([ClientLoader(d, batch_size, seed=seed + k)
+                    for k, d in enumerate(clients_data)])
+
+    def __len__(self) -> int:
+        return len(self.loaders)
+
+    def next_batch(self, k: int) -> Dict[str, np.ndarray]:
+        """Client ``k``'s next batch (the sequential engine's draw)."""
+        return self.loaders[k].next_batch()
+
+    def next_batches(self, k_indices: Sequence[int]) -> Dict[str, np.ndarray]:
+        """Draw the next batch of every listed client, stacked ``(G, B, ...)``
+        in ``k_indices`` order.  Each client advances exactly one draw."""
+        batches = [self.loaders[k].next_batch() for k in k_indices]
+        return {key: np.stack([b[key] for b in batches])
+                for key in batches[0]}
+
+    def skip(self, n: int):
+        """Fast-forward every client stream ``n`` draws (resume)."""
+        for ld in self.loaders:
+            ld.skip(n)
+
+    def state(self) -> List[Tuple[int, int]]:
+        return [ld.state() for ld in self.loaders]
+
+    def restore(self, states: Sequence[Tuple[int, int]]):
+        if len(states) != len(self.loaders):
+            raise ValueError(
+                f"fleet state has {len(states)} client streams, loader has "
+                f"{len(self.loaders)} — refusing a partial restore that "
+                f"would silently break bitwise resume")
+        for ld, st in zip(self.loaders, states):
+            ld.restore(st)

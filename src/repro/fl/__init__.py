@@ -1,4 +1,15 @@
-from repro.fl.fedavg import fedavg, fedavg_delta, model_bytes  # noqa: F401
+from repro.fl.fedavg import (  # noqa: F401
+    fedavg,
+    fedavg_delta,
+    fedavg_delta_stacked,
+    model_bytes,
+)
+from repro.fl.fleet import (  # noqa: F401
+    BatchedEngine,
+    SequentialEngine,
+    StackedRows,
+    get_engine,
+)
 from repro.fl.comm import (  # noqa: F401
     Transport,
     constant_bandwidth,

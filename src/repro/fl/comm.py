@@ -1,9 +1,25 @@
-"""Simulated transport between clients and the server.
+"""Simulated transport between clients and the server (paper §V-A/§V-D).
 
-The paper emulates Wi-Fi / 4G with Linux ``tc``; here the transport is a
-bandwidth schedule (bits/s per round per device) with time accounting and
-optional compression of the payload (int8 smashed data, top-k deltas).
+The paper emulates Wi-Fi / 4G by throttling a real link with Linux ``tc``;
+here the transport is a bandwidth schedule plus time accounting, and the
+payloads themselves can be compressed (int8 smashed data via
+kernels/quant_transfer, top-k weight deltas via kernels/topk_compress).
 The same abstraction models cross-pod DCN links in the datacenter runs.
+
+Units, fixed across the codebase: ``bandwidth_fn(round, device)`` returns
+**bits/s** (the paper quotes Mbps; 75 Mbps == ``75e6``); ``transfer_time``
+takes payload **bytes** and returns **seconds** (``latency_s`` added per
+transfer, so a round trip pays it twice); ``compression_ratio`` < 1 scales
+the modelled bytes of *every* transfer (use the explicit quantize/density
+knobs in ``FLConfig`` for payload-specific compression instead).
+
+``run_federated`` charges, per device per round,
+``local_iters x round_comm_time(cut up, cut down)`` for the smashed-data
+round trips (activations up, gradients back — zero at the native OP) plus
+one ``round_comm_time(delta up, model down)`` weight sync; see
+``fl/loop.py`` and docs/API.md.  ``paper_schedule`` reproduces §V-D's
+5-slot throttling: from ``start_round`` each device in turn drops to
+``low_bps`` for ``slot_len`` rounds (Jetson first, Pi3-2 last).
 """
 from __future__ import annotations
 

@@ -54,6 +54,33 @@ def fedavg_delta(global_params: Params, client_params: List[Params],
     return jax.tree_util.tree_map(agg, global_params, *client_params)
 
 
+def fedavg_delta_stacked(global_params: Params, stacked_params: Params,
+                         weights: Optional[Sequence[float]] = None) -> Params:
+    """``fedavg_delta`` over a *stacked* client axis: every leaf of
+    ``stacked_params`` carries a leading ``(K, ...)`` client dimension (the
+    layout the batched fleet engine trains — fl/fleet.py), so the weighted
+    delta average is one tensordot per leaf instead of a K-wide Python loop.
+
+    Numerically equivalent to ``fedavg_delta`` on the unstacked list up to
+    float32 summation order.
+    """
+
+    def first_leaf(p):
+        return jax.tree_util.tree_leaves(p)[0]
+
+    k = int(first_leaf(stacked_params).shape[0])
+    w = np.ones(k) / k if weights is None else np.asarray(weights, np.float64)
+    w = w / w.sum()
+    wj = jnp.asarray(w, jnp.float32)
+
+    def agg(g, s):
+        delta = s.astype(jnp.float32) - g.astype(jnp.float32)[None]
+        upd = jnp.tensordot(wj, delta, axes=1)
+        return (g.astype(jnp.float32) + upd).astype(g.dtype)
+
+    return jax.tree_util.tree_map(agg, global_params, stacked_params)
+
+
 def model_bytes(params: Params) -> int:
     return int(sum(leaf.size * leaf.dtype.itemsize
                    for leaf in jax.tree_util.tree_leaves(params)))

@@ -16,6 +16,14 @@ int8-quantized via kernels/quant_transfer, which also shrinks the modelled
 bytes) and the per-round weight delta sync (optionally top-k sparsified via
 kernels/topk_compress) both flow through ``Transport.transfer_time``.
 
+How the K clients' local SGD actually executes is delegated to a *fleet
+engine* (``fl/fleet.py``, selected by ``FLConfig.engine``): the
+``"sequential"`` engine loops clients in Python (one dispatch per client
+iteration), the ``"batched"`` engine vmaps OP groups over a scanned round
+(one dispatch per group) for fleet-scale simulation — same seeds, same
+history up to float32 summation order (benchmarks/fleet_scaling.py measures
+the throughput gap).
+
 Fault tolerance is first-class: deadline straggler drops, failure injection,
 atomic checkpoints with bitwise resume, and elastic membership (all drilled
 in tests/test_runtime.py).
@@ -23,7 +31,6 @@ in tests/test_runtime.py).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Dict, List, Optional
 
 import jax
@@ -33,11 +40,12 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
-from repro.data.loader import ClientLoader
+from repro.data.loader import FleetLoader
 from repro.fl.comm import Transport
-from repro.fl.fedavg import fedavg_delta, model_bytes
+from repro.fl.fedavg import fedavg_delta, fedavg_delta_stacked, model_bytes
+from repro.fl.fleet import StackedRows, get_engine, rows_as_list, take_rows
 from repro.fl.planner import FedAdaptPlanner, Planner, StaticPlanner
-from repro.models.split_program import SplitProgram, get_split_program
+from repro.models.split_program import get_split_program
 from repro.runtime.failures import FailureInjector
 from repro.runtime.straggler import deadline_mask, reweight
 
@@ -57,20 +65,11 @@ class FLConfig:
     augment: bool = True             # horizontal flip p=0.5 (paper §V-B)
     quantize_transfer: bool = False  # int8 smashed data across the cut
     delta_density: float = 1.0       # <1: top-k sparsified weight deltas
+    engine: str = "sequential"       # local-training engine: sequential |
+                                     # batched (vmap'd OP groups, fl/fleet.py)
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
-
-
-def _make_local_step(program: SplitProgram, quantize: bool):
-    @partial(jax.jit, static_argnames=("op",))
-    def step(params, batch, lr, op):
-        loss, grads = jax.value_and_grad(
-            lambda p: program.loss_through_cut(p, batch, op,
-                                               quantize=quantize))(params)
-        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
-        return new, loss
-    return step
 
 
 def _resolve_planner(
@@ -124,9 +123,10 @@ def run_federated(
     program = get_split_program(cfg)
     K = len(clients_data)
     params = program.init(jax.random.PRNGKey(fl.seed))
-    local_step = _make_local_step(program, fl.quantize_transfer)
-    loaders = [ClientLoader(d, fl.batch_size, seed=fl.seed + i)
-               for i, d in enumerate(clients_data)]
+    loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
+                                      seed=fl.seed)
+    engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
+                        fl.augment, fl.quantize_transfer)
     injector = FailureInjector(fl.fail_prob, seed=fl.seed)
     native_op = program.native_op
     seq = (clients_data[0]["tokens"].shape[1]
@@ -146,9 +146,7 @@ def run_federated(
                 # fast-forward the deterministic loaders so a resumed run
                 # sees the exact batches of an uninterrupted one (bitwise
                 # resume — tests/test_runtime.py)
-                for ld in loaders:
-                    for _ in range(start_round * fl.local_iters):
-                        ld.next_batch()
+                loaders.skip(start_round * fl.local_iters)
 
     # --- round time accounting -------------------------------------------
     def comm_times(ops: List[int], round_idx: int) -> np.ndarray:
@@ -200,28 +198,11 @@ def run_federated(
         # --- plan offloading for this round --------------------------------
         bandwidths = sim.bandwidths(r) if sim is not None else None
         ops = plan.plan(r, times, bandwidths)
-        # --- local training -------------------------------------------------
+        # --- local training (fleet engine) ----------------------------------
         alive = injector.round_mask(K)
-        client_params: List = []
-        for k in range(K):
-            if not alive[k]:
-                continue
-            p_k = params
-            for it in range(fl.local_iters):
-                batch = loaders[k].next_batch()
-                if fl.augment and "images" in batch:
-                    # stateless per-(round, client, iter) flip rng so a
-                    # resumed run reproduces the same augmentations
-                    images = batch["images"]
-                    flip_rng = np.random.RandomState(
-                        (fl.seed * 1_000_003 + r * 1009 + k * 31 + it)
-                        % (2 ** 31))
-                    flip = flip_rng.rand(len(images)) < 0.5
-                    batch["images"] = np.where(flip[:, None, None, None],
-                                               images[:, :, ::-1, :], images)
-                jbatch = {key: jnp.asarray(v) for key, v in batch.items()}
-                p_k, _ = local_step(p_k, jbatch, jnp.float32(lr), ops[k])
-            client_params.append(p_k)
+        idxs, rows = engine.run_round(params, loaders, ops,
+                                      [int(k) for k in np.flatnonzero(alive)],
+                                      r, lr)
         # --- timing + straggler handling ------------------------------------
         times, comm = round_times(ops, r)
         keep = np.ones(K, bool)
@@ -229,15 +210,22 @@ def run_federated(
             keep = deadline_mask(times, fl.deadline_factor)
         keep &= alive
         weights = reweight(sizes, keep)
-        surv_idx = [k for k in np.flatnonzero(alive) if keep[k]]
-        survivors = [cp for k, cp in zip(np.flatnonzero(alive), client_params)
-                     if keep[k]]
+        kept_pos = [i for i, k in enumerate(idxs) if keep[k]]
+        surv_idx = [idxs[i] for i in kept_pos]
         surv_w = [weights[k] for k in surv_idx]
-        if survivors:
+        if kept_pos:
             if fl.delta_density < 1.0:
-                survivors = _compress_deltas(params, survivors, delta_errors,
-                                             surv_idx, fl.delta_density)
-            params = fedavg_delta(params, survivors, surv_w)
+                # top-k error feedback is per-client state: unstack if needed
+                survivors = _compress_deltas(params,
+                                             rows_as_list(rows, kept_pos),
+                                             delta_errors, surv_idx,
+                                             fl.delta_density)
+                params = fedavg_delta(params, survivors, surv_w)
+            else:
+                survivors = take_rows(rows, kept_pos)
+                params = (fedavg_delta_stacked(params, survivors.tree, surv_w)
+                          if isinstance(survivors, StackedRows) else
+                          fedavg_delta(params, survivors, surv_w))
         plan.feedback(times)
         # --- evaluation + checkpoint ----------------------------------------
         acc = float(eval_fn(params, test_batch))

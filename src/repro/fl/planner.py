@@ -1,17 +1,28 @@
 """Pluggable per-round offloading planners for the federated loop.
 
 A ``Planner`` decides each device's Offloading Point every round from the
-observed round times and bandwidths.  ``run_federated`` is generic over the
+observed round times (seconds per round, one entry per device) and the
+current bandwidths (bits/s per device).  The protocol mirrors the paper's
+control loop (Fig. 2): ``begin`` receives the classic-FL baseline times
+B^k measured before round 0 (the §III-A state normalizer), ``plan`` maps
+observations to one OP per device, and ``feedback`` receives the realized
+round times the executed plan produced — the RL planner turns these into
+the Eq. 5 reward.  ``run_federated`` (fl/loop.py) is generic over the
 protocol, so the paper's RL controller, the static-OP baselines and simple
 heuristics all drive the same loop:
 
-* ``StaticPlanner``   — fixed OP for every device (classic FL / SplitFed);
-* ``FedAdaptPlanner`` — wraps ``core.controller.FedAdaptController`` (the
-  paper's clustering + PPO pipeline);
+* ``StaticPlanner``   — fixed OP for every device: classic FL at the native
+  OP, or SplitFed [Thapa et al.] at a uniform cut (the paper's §V-B
+  baselines);
+* ``FedAdaptPlanner`` — wraps ``core.controller.FedAdaptController``, the
+  paper's §IV pipeline: k-means device clustering + PPO actor emitting one
+  workload fraction mu^g per group, post-processed to an OP;
 * ``GreedyPlanner``   — bandwidth-greedy heuristic baseline: each device
   independently picks the Eq. 1 argmin OP for its current bandwidth.  No
   learning, no grouping; the natural ablation between static OPs and the RL
   agent.
+
+docs/API.md has the full contract with a runnable custom-planner example.
 """
 from __future__ import annotations
 

@@ -69,6 +69,15 @@ class SplitProgram:
     def init(self, key, dtype=jnp.float32) -> Params:
         raise NotImplementedError
 
+    def init_batched(self, key, n: int, dtype=jnp.float32) -> Params:
+        """``n`` independently-initialized parameter sets stacked along a
+        leading client axis — the ``(K, ...)`` layout the batched fleet
+        engine (fl/fleet.py) trains with ``jax.vmap`` and the stacked FedAvg
+        (``fl.fedavg.fedavg_delta_stacked``) aggregates.  Row ``i`` is
+        bitwise ``init(jax.random.split(key, n)[i])``."""
+        inits = [self.init(k, dtype) for k in jax.random.split(key, n)]
+        return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *inits)
+
     def client_forward(self, params: Params, batch: Dict, op: int):
         """Device stage: inputs -> cut payload (a pytree of arrays)."""
         raise NotImplementedError

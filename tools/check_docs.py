@@ -1,0 +1,115 @@
+"""Docs hygiene checks so docs/ can't rot silently (run in CI).
+
+Two checks over the repo's markdown (README.md, docs/*.md, *.md at root):
+
+* link check  — every relative markdown link ``[text](path)`` must resolve
+  to an existing file (external http(s) links are skipped: the CI container
+  is offline), and every in-page anchor ``[text](#frag)`` must match a
+  heading in that file;
+* snippet check — every fenced ```python block must at least *compile*
+  (``compile(..., "exec")``), so renamed APIs and syntax rot in the doc
+  snippets fail CI instead of misleading readers.  Blocks marked with a
+  preceding ``<!-- no-check -->`` comment are skipped.
+
+    python tools/check_docs.py            # from the repo root
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+from typing import List, Tuple
+
+REPO = Path(__file__).resolve().parent.parent
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(\w*)\s*$")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$")
+
+
+def _md_files() -> List[Path]:
+    files = sorted(REPO.glob("*.md")) + sorted((REPO / "docs").glob("*.md"))
+    return [f for f in files if f.is_file()]
+
+
+def _anchor(heading: str) -> str:
+    """GitHub-style anchor: lowercase, spaces -> dashes, drop punctuation."""
+    a = heading.strip().lower()
+    a = re.sub(r"[`*_]", "", a)
+    a = re.sub(r"[^\w\- ]", "", a)
+    return a.replace(" ", "-")
+
+
+def _anchors(md: Path) -> set:
+    out = set()
+    for line in md.read_text().splitlines():
+        m = HEADING_RE.match(line)
+        if m:
+            out.add(_anchor(m.group(1)))
+    return out
+
+
+def check_links(files: List[Path]) -> List[str]:
+    errors = []
+    for md in files:
+        text = md.read_text()
+        # strip fenced code blocks: links inside code are not navigation
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = target.partition("#")
+            dest = (md.parent / path_part).resolve() if path_part else md
+            if path_part and not dest.exists():
+                errors.append(f"{md.relative_to(REPO)}: broken link "
+                              f"-> {target}")
+                continue
+            if frag and dest.suffix == ".md" and dest.exists():
+                if frag not in _anchors(dest):
+                    errors.append(f"{md.relative_to(REPO)}: missing anchor "
+                                  f"-> {target}")
+    return errors
+
+
+def _python_blocks(md: Path) -> List[Tuple[int, str]]:
+    blocks, buf, lang, start, skip = [], [], None, 0, False
+    for i, line in enumerate(md.read_text().splitlines(), 1):
+        m = FENCE_RE.match(line.strip())
+        if m and lang is None:
+            lang, buf, start = m.group(1).lower(), [], i
+        elif line.strip() == "```" and lang is not None:
+            if lang == "python" and not skip:
+                blocks.append((start, "\n".join(buf)))
+            lang, skip = None, False
+        elif lang is not None:
+            buf.append(line)
+        elif "<!-- no-check -->" in line:
+            skip = True
+    return blocks
+
+
+def check_snippets(files: List[Path]) -> List[str]:
+    errors = []
+    for md in files:
+        for lineno, src in _python_blocks(md):
+            try:
+                compile(src, f"{md.name}:{lineno}", "exec")
+            except SyntaxError as e:
+                errors.append(f"{md.relative_to(REPO)}:{lineno}: snippet "
+                              f"does not compile: {e.msg} (line {e.lineno})")
+    return errors
+
+
+def main() -> int:
+    files = _md_files()
+    errors = check_links(files) + check_snippets(files)
+    n_snippets = sum(len(_python_blocks(f)) for f in files)
+    for e in errors:
+        print(f"FAIL {e}")
+    print(f"checked {len(files)} markdown files, {n_snippets} python "
+          f"snippets: {'FAIL' if errors else 'OK'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
