@@ -1,0 +1,124 @@
+"""Virtual time-to-target-accuracy: async buffered aggregation vs the
+synchronous deadline-drop engine.
+
+Two scenarios, both on the paper's calibrated 5-device testbed
+(core/testbed.py) with real VGG-5 training:
+
+* ``throttle`` — the §V-D changing-network schedule
+  (``fl.comm.paper_schedule``): each device in turn drops to 10 Mbps.
+  Sync pays the throttled device's comm every slot; async
+  (``buffer_size < K``) keeps aggregating the fast reporters and folds the
+  throttled one back in with a staleness discount.
+* ``straggler`` — an extreme-straggler fleet (one device ~50x slower).
+  The sync baseline either stalls every round on the straggler
+  (no deadline) or drops it outright (deadline_factor); async absorbs it.
+
+Each engine runs the same number of server steps; the derived column
+reports the *virtual* seconds to reach the target eval accuracy (the
+weaker run's final accuracy, so both runs reach it) and the final
+accuracy.  ``us_per_call`` is host wall time per run, as elsewhere.
+
+    PYTHONPATH=src python -m benchmarks.async_vs_sync
+    PYTHONPATH=src python -m benchmarks.run --only async_vs_sync
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Csv, timed
+from repro.configs.vgg import VGG5
+from repro.core import costmodel as cm
+from repro.core.env import SimulatedCluster
+from repro.core.testbed import paper_testbed
+from repro.data.synthetic import make_cifar_like, split_clients
+from repro.fl.async_loop import run_federated_async
+from repro.fl.comm import Transport, paper_schedule
+from repro.fl.loop import FLConfig, run_federated
+
+ROUNDS = 8
+LOCAL_ITERS = 2
+BATCH = 20
+
+
+def _fleet(scenario: str):
+    """(sim, transport, K) for one scenario."""
+    w, devices, c_srv, ovh = paper_testbed(VGG5)
+    w = cm.vgg_workload(VGG5, batch_size=BATCH)
+    if scenario == "straggler":
+        devices = list(devices[:4])
+        devices.append(cm.DeviceProfile(
+            "extreme", devices[1].flops_per_s / 50.0, 75e6))
+        transport = Transport(lambda r, d: 75e6)
+    else:                                     # §V-D throttling schedule
+        transport = Transport(paper_schedule(start_round=2, slot_len=1,
+                                             low_bps=10e6))
+    sim = SimulatedCluster(w, devices, c_srv, VGG5.ops,
+                           iterations=LOCAL_ITERS, overhead_s=ovh, seed=0)
+    return sim, transport, len(devices)
+
+
+def _virtual_times(hist) -> np.ndarray:
+    if "virtual_time" in hist:
+        return np.asarray(hist["virtual_time"])
+    return np.cumsum(hist["round_time"])
+
+
+def _time_to(hist, target: float) -> float:
+    acc = np.asarray(hist["accuracy"])
+    hit = np.flatnonzero(acc >= target)
+    if hit.size == 0:
+        return float("inf")
+    return float(_virtual_times(hist)[hit[0]])
+
+
+def run_scenario(scenario: str, csv: Csv) -> None:
+    sim, transport, K = _fleet(scenario)
+    clients = split_clients(make_cifar_like(K * 60, seed=0), K)
+    test = make_cifar_like(100, seed=9)
+    base = dict(rounds=ROUNDS, local_iters=LOCAL_ITERS, batch_size=BATCH,
+                mode="sfl", static_op=2, augment=False, seed=0)
+
+    runs = {
+        "sync_wait": lambda: run_federated(
+            VGG5, clients, test, FLConfig(**base), sim=sim,
+            transport=transport),
+        "sync_deadline": lambda: run_federated(
+            VGG5, clients, test, FLConfig(deadline_factor=2.0, **base),
+            sim=sim, transport=transport),
+        "async": lambda: run_federated_async(
+            VGG5, clients, test,
+            FLConfig(buffer_size=max(2, K - 2), staleness_discount=0.5,
+                     **base),
+            sim=sim, transport=transport),
+    }
+    hists, walls = {}, {}
+    for name, fn in runs.items():
+        hists[name], walls[name] = timed(fn)
+
+    target = min(float(np.max(h["accuracy"])) for h in hists.values())
+    for name, h in hists.items():
+        t = _time_to(h, target)
+        csv.add(f"async_vs_sync/{scenario}/{name}", walls[name],
+                f"virtual_s_to_acc[{target:.2f}]={t:.2f} "
+                f"final_acc={float(np.asarray(h['accuracy'])[-1]):.3f} "
+                f"server_steps={len(h['accuracy'])}")
+
+
+def bench_async_vs_sync():
+    """benchmarks/run.py entry: summary row over both scenarios."""
+    csv = Csv()
+    for scenario in ("throttle", "straggler"):
+        run_scenario(scenario, csv)
+    parts = []
+    for name, _us, derived in csv.rows:
+        short = name.split("async_vs_sync/")[1]
+        parts.append(f"{short}: {derived.split(' ')[0]}")
+    return 0.0, "; ".join(parts)
+
+
+if __name__ == "__main__":
+    out = Csv()
+    for scenario in ("throttle", "straggler"):
+        run_scenario(scenario, out)
+    print("name,us_per_call,derived")
+    out.emit()

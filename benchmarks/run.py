@@ -15,6 +15,7 @@ import time
 import traceback
 
 from benchmarks import paper_validation as pv
+from benchmarks.async_vs_sync import bench_async_vs_sync
 
 
 def bench_roofline():
@@ -84,6 +85,8 @@ BENCHES = {
     "fig9": pv.bench_fig9,
     "quant_transport": pv.bench_quant_transport,
     "overhead": pv.bench_overhead,
+    # beyond-paper scenarios
+    "async_vs_sync": bench_async_vs_sync,
     # system benches
     "roofline": bench_roofline,
     "kernels": bench_kernels,

@@ -1,0 +1,60 @@
+"""Asynchronous federated training on a virtual clock.
+
+A 4-client fleet with one extreme straggler (~40x slower) trains VGG-5
+two ways:
+
+* synchronous (``fl.loop.run_federated``): every round barriers on the
+  straggler, so virtual time per round is the straggler's time;
+* asynchronous (``fl.async_loop.run_federated_async``): the server
+  aggregates as soon as ``buffer_size=2`` updates arrive, discounting
+  stale ones by ``(1+s)^-0.5``, and re-dispatches each reporter with a
+  freshly planned OP — the straggler's update lands late but never blocks
+  the fast clients.
+
+Both runs do the same number of server steps of *real* JAX training; only
+the virtual clock (Eq. 1 compute + Transport comm) differs.
+
+    PYTHONPATH=src python examples/async_federated.py
+"""
+import numpy as np
+
+from repro.configs.vgg import VGG5
+from repro.core import costmodel as cm
+from repro.core.env import SimulatedCluster
+from repro.data.synthetic import make_cifar_like, split_clients
+from repro.fl.async_loop import run_federated_async
+from repro.fl.loop import FLConfig, run_federated
+
+K = 4
+ROUNDS = 6
+
+if __name__ == "__main__":
+    w = cm.vgg_workload(VGG5, batch_size=20)
+    devices = [cm.DeviceProfile(f"dev{i}", 2e9, 75e6) for i in range(K - 1)]
+    devices.append(cm.DeviceProfile("straggler", 5e7, 75e6))
+    sim = SimulatedCluster(w, devices, 8e9, VGG5.ops, iterations=2, seed=0)
+    clients = split_clients(make_cifar_like(K * 60, seed=0), K)
+    test = make_cifar_like(80, seed=9)
+    base = dict(rounds=ROUNDS, local_iters=2, batch_size=20, mode="sfl",
+                static_op=2, augment=False, seed=0)
+
+    h_sync = run_federated(VGG5, clients, test, FLConfig(**base), sim=sim)
+    h_async = run_federated_async(
+        VGG5, clients, test,
+        FLConfig(buffer_size=2, staleness_discount=0.5, **base), sim=sim)
+
+    print(f"{'step':>4} {'sync_t':>8} {'async_t':>8} "
+          f"{'sync_acc':>8} {'async_acc':>9} {'staleness':>9}")
+    sync_t = np.cumsum(h_sync["round_time"])
+    for r in range(ROUNDS):
+        print(f"{r:>4} {sync_t[r]:>8.2f} {h_async['virtual_time'][r]:>8.2f} "
+              f"{h_sync['accuracy'][r]:>8.3f} {h_async['accuracy'][r]:>9.3f} "
+              f"{h_async['staleness'][r]:>9.1f}")
+    speedup = sync_t[-1] / h_async["virtual_time"][-1]
+    print(f"\nvirtual time for {ROUNDS} server steps: "
+          f"sync {sync_t[-1]:.1f}s vs async "
+          f"{h_async['virtual_time'][-1]:.1f}s ({speedup:.1f}x) — the sync "
+          f"barrier pays the straggler every round, the async buffer never "
+          f"waits for it")
+    print("time-to-accuracy comparison across scenarios: "
+          "PYTHONPATH=src python -m benchmarks.async_vs_sync")

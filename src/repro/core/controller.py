@@ -59,24 +59,36 @@ class FedAdaptController:
         Groups are formed from these round-0 times (paper §V-B: 'the device
         training time in the first round is used to cluster'); only the
         low-bandwidth group membership is re-evaluated every round."""
-        self.baselines = np.asarray(baseline_times, np.float64)
+        # np.array (not asarray): always copy, so a caller that keeps
+        # mutating its times buffer (the async loop does, in place) can't
+        # silently corrupt the stored round-0 baselines
+        self.baselines = np.array(baseline_times, np.float64)
         self.prev_actions = np.ones(self.G, np.float32)
 
     def _cluster(self, bandwidths: np.ndarray) -> Grouping:
         assert self.baselines is not None
-        if self.low_bw_threshold is not None:
+        if self.low_bw_threshold is not None and self.G >= 2:
             # paper §IV: the low-bandwidth group is an *additional reserved*
             # group — normal devices always cluster into G-1 groups and the
             # last slot's semantics stay 'low-bandwidth' even when empty
             # (otherwise the deployed agent's per-slot policy shifts meaning
-            # between rounds with and without throttled devices).
+            # between rounds with and without throttled devices).  Reserving
+            # the slot requires G >= 2: at G == 1 the reserved group would
+            # push num_groups past G, overflowing the agent's fixed obs and
+            # action width (every overflow group would silently share the
+            # last slot), so a single-group agent clusters everyone together.
             has_low = bool((bandwidths < self.low_bw_threshold).any())
-            return cluster_devices(
-                self.baselines, bandwidths, num_groups=max(self.G - 1, 1),
+            grouping = cluster_devices(
+                self.baselines, bandwidths, num_groups=self.G - 1,
                 low_bw_threshold=self.low_bw_threshold if has_low else None)
-        return cluster_devices(
-            self.baselines, bandwidths, num_groups=self.G,
-            low_bw_threshold=None)
+        else:
+            grouping = cluster_devices(
+                self.baselines, bandwidths, num_groups=self.G,
+                low_bw_threshold=None)
+        assert grouping.num_groups <= self.G, \
+            f"clustering produced {grouping.num_groups} groups for a " \
+            f"G={self.G} agent"
+        return grouping
 
     def _group_obs(self, grouping: Grouping, times: np.ndarray) -> np.ndarray:
         """Fixed-width obs: G slots; empty slots zero-padded."""

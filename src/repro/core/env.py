@@ -37,12 +37,24 @@ class SimulatedCluster:
     bandwidth_fn: Optional[BandwidthFn] = None
     seed: int = 0
 
-    def __post_init__(self):
-        self._rng = np.random.RandomState(self.seed)
-
     @property
     def num_devices(self) -> int:
         return len(self.devices)
+
+    def _jittered_speed(self, dev_idx: int, round_idx: int) -> float:
+        """Device speed with multiplicative lognormal jitter keyed by
+        ``(seed, round, device)``: two calls for the same round return the
+        same draw, and a checkpoint-resumed run replays the identical
+        jitter stream (bitwise resume — tests/test_async.py), instead of
+        consuming a shared mutable RNG whose position depends on call
+        history."""
+        speed = self.devices[dev_idx].flops_per_s
+        if self.jitter > 0:
+            rng = np.random.RandomState(
+                (self.seed * 1_000_003 + round_idx * 10_007
+                 + dev_idx * 101 + 17) % (2 ** 31))
+            speed *= float(np.exp(rng.randn() * self.jitter))
+        return speed
 
     def bandwidths(self, round_idx: int) -> np.ndarray:
         if self.bandwidth_fn is None:
@@ -54,10 +66,8 @@ class SimulatedCluster:
         """Per-device round time for the given per-device OPs."""
         bw = self.bandwidths(round_idx)
         out = []
-        for i, (dev, op) in enumerate(zip(self.devices, ops)):
-            speed = dev.flops_per_s
-            if self.jitter > 0:
-                speed *= float(np.exp(self._rng.randn() * self.jitter))
+        for i, op in enumerate(ops):
+            speed = self._jittered_speed(i, round_idx)
             t = iteration_time(self.workload, op, speed, self.server_flops,
                                bw[i], self.overhead_s)
             out.append(t * self.iterations)
@@ -68,10 +78,8 @@ class SimulatedCluster:
         """Per-device round time, compute terms only (no network): the
         transport path in fl/loop.py adds comm via fl/comm.Transport."""
         out = []
-        for dev, op in zip(self.devices, ops):
-            speed = dev.flops_per_s
-            if self.jitter > 0:
-                speed *= float(np.exp(self._rng.randn() * self.jitter))
+        for i, op in enumerate(ops):
+            speed = self._jittered_speed(i, round_idx)
             t = compute_time(self.workload, op, speed, self.server_flops)
             if op < self.workload.num_layers:
                 t += self.overhead_s

@@ -23,3 +23,7 @@ from repro.fl.planner import (  # noqa: F401
     StaticPlanner,
 )
 from repro.fl.loop import FLConfig, run_federated  # noqa: F401
+from repro.fl.async_loop import (  # noqa: F401
+    run_federated_async,
+    staleness_weights,
+)

@@ -1,0 +1,228 @@
+"""Event-driven asynchronous federated runtime (virtual-clock).
+
+FedAdapt's synchronous loop barriers every round on its slowest device —
+offloading *shrinks* the straggler (the paper's claim) but cannot remove
+the barrier.  This module adds the complementary mitigation surveyed by
+Pfeiffer et al. (arXiv:2307.09182): buffered asynchronous aggregation with
+staleness-discounted weights (FedBuff, Nguyen et al.; FedAsync, Xie et
+al.).  Each device finishes its local split-training at its own modeled
+time — Eq. 1 compute via ``SimulatedCluster`` plus comm via ``Transport``,
+the same ``fl.loop.RoundClock`` accounting as the synchronous loop — and
+reports to a server that aggregates as soon as ``FLConfig.buffer_size``
+updates arrive, then immediately re-dispatches each reporting client with
+a freshly planned Offloading Point against the new params.
+
+Aggregation: each buffered client delta (taken against the params version
+the client was dispatched with) is weighted by ``n_k * (1+s_k)^-a`` where
+``s_k`` is the staleness in server versions and ``a`` is
+``FLConfig.staleness_discount``; updates staler than
+``FLConfig.max_staleness`` are discarded.  With ``buffer_size=K`` and
+``staleness_discount=0`` every dispatch is a synchronous round and the
+runtime reproduces ``run_federated``'s history exactly (the equivalence
+drill in tests/test_async.py).
+
+The model updates are *real* JAX training through the same fleet engines
+as the synchronous loop (``FLConfig.engine``): all clients re-dispatched
+at one virtual instant train in one ``engine.run_round`` call, so clients
+sharing an OP fuse into a single vmap'd dispatch under the batched engine.
+Virtual time is tracked by ``runtime.scheduler.EventQueue``; clients on
+dead links (``Transport`` returns ``inf``) simply never report, and a
+fully-stalled fleet ends the run early instead of spinning.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.controller import FedAdaptController
+from repro.core.env import SimulatedCluster
+from repro.data.loader import FleetLoader
+from repro.fl.comm import Transport
+from repro.fl.fedavg import fedavg_apply_deltas
+from repro.fl.fleet import get_engine, rows_as_list
+from repro.fl.loop import FLConfig, RoundClock, _resolve_planner
+from repro.fl.planner import Planner
+from repro.models.split_program import get_split_program
+from repro.runtime.scheduler import EventQueue
+from repro.runtime.straggler import reweight
+
+
+def staleness_weights(sizes, staleness, discount: float) -> np.ndarray:
+    """Unnormalized async aggregation weights: ``n_k * (1 + s_k)^-a``
+    (polynomial staleness discount — FedAsync's ``s_a(t-tau)``).  ``a=0``
+    recovers plain data-size FedAvg weighting."""
+    n = np.asarray(sizes, np.float64)
+    s = np.asarray(staleness, np.float64)
+    return n * (1.0 + s) ** (-float(discount))
+
+
+@dataclasses.dataclass
+class _Report:
+    """One client's finished local training, in flight to the server."""
+    client: int
+    version: int      # params version the client was dispatched with
+    op: int
+    delta: Any        # f32 param delta vs the dispatch-time params
+    time: float       # modeled duration (compute + comm) of this dispatch
+    comm: float
+
+
+def run_federated_async(
+    cfg,
+    clients_data: List[Dict[str, np.ndarray]],
+    test_data: Dict[str, np.ndarray],
+    fl: FLConfig,
+    sim: Optional[SimulatedCluster] = None,
+    controller: Optional[FedAdaptController] = None,
+    planner: Optional[Planner] = None,
+    transport: Optional[Transport] = None,
+) -> Dict[str, np.ndarray]:
+    """Train any registered config through the async virtual-clock runtime.
+
+    Same contract as ``fl.loop.run_federated`` (one history row per server
+    aggregation instead of per synchronous round) plus async columns:
+    ``virtual_time`` (the clock at each aggregation), ``staleness`` (mean
+    staleness of the applied updates) and ``dropped`` counting
+    ``max_staleness`` discards.  ``fl.rounds`` bounds the number of
+    aggregations; the run ends early if every in-flight client sits behind
+    a dead link.
+    """
+    program = get_split_program(cfg)
+    K = len(clients_data)
+    buffer_size = fl.buffer_size if fl.buffer_size > 0 else K
+    if not 1 <= buffer_size <= K:
+        raise ValueError(f"buffer_size={buffer_size} outside [1, K={K}]")
+    if fl.deadline_factor > 0 or fl.fail_prob > 0:
+        raise ValueError(
+            "the async runtime replaces deadline drops and failure masks "
+            "(a slow client is simply aggregated late); run the sync loop "
+            "for deadline_factor/fail_prob scenarios")
+    if fl.checkpoint_dir:
+        raise ValueError("async checkpoint/resume is not supported yet")
+
+    params = program.init(jax.random.PRNGKey(fl.seed))
+    loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
+                                      seed=fl.seed)
+    engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
+                        fl.augment, fl.quantize_transfer)
+    native_op = program.native_op
+    seq = (clients_data[0]["tokens"].shape[1]
+           if "tokens" in clients_data[0] else None)
+    sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
+    track_errors = fl.delta_density < 1.0
+    delta_errors: List = [None] * K
+    clock = RoundClock(program, fl, K, seq, params, sim=sim,
+                       transport=transport)
+
+    # round-0 baselines (classic FL, no offloading) — same normalizer as the
+    # synchronous loop, so planners behave identically in both runtimes
+    times, _ = clock.times([native_op] * K, 0)
+    if controller is not None and controller.baselines is None:
+        controller.begin(times)
+    plan = _resolve_planner(fl, native_op, planner, controller, sim)
+    plan.begin(times)
+
+    comm = np.zeros(K)
+    current_ops = [native_op] * K
+    hist: Dict[str, list] = {"accuracy": [], "round_time": [], "ops": [],
+                             "times": [], "comm_time": [], "dropped": [],
+                             "virtual_time": [], "staleness": []}
+    eval_fn = jax.jit(lambda p, b: program.eval_metric(p, b))
+    test_batch = {k: jnp.asarray(v) for k, v in test_data.items()}
+
+    queue = EventQueue()
+    version = 0            # server params version == aggregations so far
+
+    def dispatch(ks: List[int]) -> None:
+        """Plan fresh OPs, run the clients' local training (one fleet-engine
+        call: same-OP clients fuse into one vmap'd dispatch), and schedule
+        their reports at ``now + modeled duration``."""
+        lr = fl.lr * (fl.lr_drop_factor if version >= fl.lr_drop_round
+                      else 1.0)
+        bandwidths = sim.bandwidths(version) if sim is not None else None
+        ops = plan.plan(version, times, bandwidths)
+        for k in ks:
+            current_ops[k] = int(ops[k])
+        idxs, rows = engine.run_round(params, loaders, ops, list(ks),
+                                      version, lr)
+        t_all, c_all = clock.times(ops, version)
+        trained = rows_as_list(rows, list(range(len(idxs))))
+        for pos, k in enumerate(idxs):
+            delta = jax.tree_util.tree_map(
+                lambda c, g: c.astype(jnp.float32) - g.astype(jnp.float32),
+                trained[pos], params)
+            rpt = _Report(k, version, int(ops[k]), delta,
+                          float(t_all[k]), float(c_all[k]))
+            queue.push(queue.now + rpt.time, rpt)
+
+    dispatch(list(range(K)))
+    buffer: List[_Report] = []
+    last_agg_clock = 0.0
+
+    while len(hist["accuracy"]) < fl.rounds:
+        if len(buffer) < buffer_size and np.isfinite(queue.peek_time()):
+            _, rpt = queue.pop()
+            times[rpt.client] = rpt.time
+            comm[rpt.client] = rpt.comm
+            buffer.append(rpt)
+            continue
+        if not buffer:
+            break          # every in-flight client is behind a dead link
+        # A short buffer here means the remaining in-flight clients can
+        # never report (dead links): flush the finished updates rather than
+        # discarding real training — the live fleet just shrank below
+        # buffer_size.
+
+        # --- server step: staleness-discounted buffered FedAvg -----------
+        buffer.sort(key=lambda e: e.client)
+        stale = {e.client: version - e.version for e in buffer}
+        fresh = [e for e in buffer
+                 if fl.max_staleness is None
+                 or stale[e.client] <= fl.max_staleness]
+        if fresh:
+            s = np.asarray([stale[e.client] for e in fresh], np.float64)
+            w_full = np.zeros(K, np.float64)
+            for e, wk in zip(fresh, staleness_weights(
+                    [sizes[e.client] for e in fresh], s,
+                    fl.staleness_discount)):
+                w_full[e.client] = wk
+            weights = reweight(w_full, w_full > 0)
+            if track_errors:
+                from repro.kernels.topk_compress.ops import compress_tree
+            deltas = []
+            for e in fresh:
+                d = e.delta
+                if track_errors:
+                    d, delta_errors[e.client] = compress_tree(
+                        d, delta_errors[e.client], density=fl.delta_density)
+                deltas.append(d)
+            params = fedavg_apply_deltas(params, deltas,
+                                         [weights[e.client] for e in fresh])
+            mean_stale = float(s.mean())
+        else:
+            mean_stale = 0.0
+        version += 1
+        plan.feedback(times)
+        # --- history row (one per aggregation) ---------------------------
+        hist["accuracy"].append(float(eval_fn(params, test_batch)))
+        hist["round_time"].append(queue.now - last_agg_clock)
+        hist["ops"].append(list(current_ops))
+        hist["times"].append(times.copy())
+        hist["comm_time"].append(comm.copy())
+        hist["dropped"].append(len(buffer) - len(fresh))
+        hist["virtual_time"].append(queue.now)
+        hist["staleness"].append(mean_stale)
+        last_agg_clock = queue.now
+        # --- re-dispatch the reporting clients at the new version --------
+        redispatch = sorted(e.client for e in buffer)
+        buffer = []
+        if len(hist["accuracy"]) < fl.rounds:
+            dispatch(redispatch)
+
+    hist_np = {k: np.asarray(v) for k, v in hist.items()}
+    hist_np["params"] = params
+    return hist_np

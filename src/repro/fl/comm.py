@@ -38,6 +38,11 @@ class Transport:
     def transfer_time(self, nbytes: float, round_idx: int,
                       device: int) -> float:
         bw = self.bandwidth_fn(round_idx, device)
+        if bw <= 0.0:
+            # dead link: the transfer never completes.  The sync loop's
+            # deadline path drops inf clients; the async runtime leaves them
+            # in flight forever (runtime/scheduler.py).
+            return float("inf")
         return self.latency_s + (nbytes * self.compression_ratio * 8.0) / bw
 
     def round_comm_time(self, up_bytes: float, down_bytes: float,

@@ -54,6 +54,27 @@ def fedavg_delta(global_params: Params, client_params: List[Params],
     return jax.tree_util.tree_map(agg, global_params, *client_params)
 
 
+def fedavg_apply_deltas(global_params: Params, deltas: List[Params],
+                        weights: Optional[Sequence[float]] = None) -> Params:
+    """``global + sum_k w_k delta_k`` over *precomputed* float32 deltas — the
+    async buffer's server step (fl/async_loop.py), where each client's delta
+    was taken against the params version it was dispatched with, not the
+    current ones.  With every delta computed against ``global_params`` this
+    performs bitwise the same arithmetic as ``fedavg_delta`` on the raw
+    client params (the sync-equivalence case)."""
+    k = len(deltas)
+    w = np.ones(k) / k if weights is None else np.asarray(weights, np.float64)
+    w = w / w.sum()
+
+    def agg(g, *ds):
+        acc = jnp.zeros(g.shape, jnp.float32)
+        for wi, d in zip(w, ds):
+            acc = acc + float(wi) * d.astype(jnp.float32)
+        return (g.astype(jnp.float32) + acc).astype(g.dtype)
+
+    return jax.tree_util.tree_map(agg, global_params, *deltas)
+
+
 def fedavg_delta_stacked(global_params: Params, stacked_params: Params,
                          weights: Optional[Sequence[float]] = None) -> Params:
     """``fedavg_delta`` over a *stacked* client axis: every leaf of

@@ -25,8 +25,15 @@ history up to float32 summation order (benchmarks/fleet_scaling.py measures
 the throughput gap).
 
 Fault tolerance is first-class: deadline straggler drops, failure injection,
-atomic checkpoints with bitwise resume, and elastic membership (all drilled
-in tests/test_runtime.py).
+atomic checkpoints with bitwise resume (params plus the run's aux state:
+top-k error feedback, controller normalizer, failure-RNG position), and
+elastic membership (all drilled in tests/test_runtime.py).
+
+This loop is *synchronous*: every round barriers on the slowest client.
+``fl/async_loop.run_federated_async`` is the event-driven alternative —
+buffered, staleness-discounted aggregation on a virtual clock — sharing
+this module's ``RoundClock`` time accounting and reproducing this loop
+exactly at ``buffer_size=K, staleness_discount=0``.
 """
 from __future__ import annotations
 
@@ -47,7 +54,7 @@ from repro.fl.fleet import StackedRows, get_engine, rows_as_list, take_rows
 from repro.fl.planner import FedAdaptPlanner, Planner, StaticPlanner
 from repro.models.split_program import get_split_program
 from repro.runtime.failures import FailureInjector
-from repro.runtime.straggler import deadline_mask, reweight
+from repro.runtime.straggler import deadline_mask, deadline_value, reweight
 
 
 @dataclasses.dataclass
@@ -67,6 +74,15 @@ class FLConfig:
     delta_density: float = 1.0       # <1: top-k sparsified weight deltas
     engine: str = "sequential"       # local-training engine: sequential |
                                      # batched (vmap'd OP groups, fl/fleet.py)
+    # --- async runtime knobs (fl/async_loop.run_federated_async) ----------
+    buffer_size: int = 0             # aggregate once this many client
+                                     # updates arrive; 0 -> K (and with
+                                     # staleness_discount=0 that special
+                                     # case reproduces this sync loop)
+    staleness_discount: float = 0.0  # a in the polynomial staleness
+                                     # discount (1 + s)^-a on update weights
+    max_staleness: Optional[int] = None  # drop updates staler than this
+                                         # (None: apply every update)
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
@@ -102,6 +118,94 @@ def _compress_deltas(params, client_params, errors, idxs, density: float):
     return out
 
 
+def _zero_errors(params, K: int) -> List:
+    """Eagerly zero-initialized per-client error-feedback state: identical
+    numerics to the lazy ``None`` start (``compress_tree`` adds zeros), but
+    a *fixed* pytree structure so the state can live in checkpoints."""
+    return [jax.tree_util.tree_map(
+        lambda a: jnp.zeros(a.shape, jnp.float32), params)
+        for _ in range(K)]
+
+
+def _ckpt_tree(params, delta_errors, track_errors: bool, ctl, K: int,
+               template: bool = False):
+    """The full checkpoint state: params plus whatever per-run aux state the
+    config implies (top-k error feedback, controller normalizer).  Resuming
+    from params alone silently diverges whenever ``delta_density < 1`` or a
+    FedAdapt controller is driving — the aux state is part of the run."""
+    tree = {"params": params}
+    if track_errors:
+        tree["delta_errors"] = delta_errors
+    if ctl is not None:
+        tree["controller"] = {
+            "baselines": (np.zeros(K, np.float64) if template
+                          else np.asarray(ctl.baselines, np.float64)),
+            "prev_actions": (np.zeros(ctl.G, np.float32) if template
+                             else np.asarray(ctl.prev_actions, np.float32)),
+        }
+    return tree
+
+
+class RoundClock:
+    """Per-device round-time accounting shared by the synchronous loop and
+    the async runtime (fl/async_loop.py).
+
+    Compute comes from the Eq. 1 cost model (``SimulatedCluster``); when a
+    ``Transport`` is supplied, communication is charged through it instead
+    of Eq. 1's built-in network term: per-iteration cut round-trips
+    (activations up — optionally int8-quantized — gradients back) plus one
+    weight-delta sync (``model_bytes * delta_density`` up, full model
+    down).  Zero-bandwidth links yield ``inf`` times (``Transport``
+    returns ``inf``), which the deadline path drops and the async runtime
+    models as a never-reporting client."""
+
+    def __init__(self, program, fl: FLConfig, K: int, seq: Optional[int],
+                 params, sim: Optional[SimulatedCluster] = None,
+                 transport: Optional[Transport] = None):
+        self.program = program
+        self.fl = fl
+        self.K = K
+        self.seq = seq
+        self.sim = sim
+        self.transport = transport
+        self.native_op = program.native_op
+        self.model_bytes = float(model_bytes(params))  # sizes are static
+
+    def comm_times(self, ops: List[int], round_idx: int) -> np.ndarray:
+        """Per-device comm time through the Transport: per-iteration cut
+        round-trips (acts out, grads back) + one weight-delta sync.  The
+        iteration count follows the sim's notion of a round when present so
+        compute and comm stay on the same clock."""
+        assert self.transport is not None
+        fl, sim = self.fl, self.sim
+        iters = sim.iterations if sim is not None else fl.local_iters
+        out = []
+        for k, op in enumerate(ops):
+            t = 0.0
+            if op < self.native_op:
+                up = self.program.cut_bytes(op, fl.batch_size, self.seq,
+                                            quantize=fl.quantize_transfer)
+                down = self.program.cut_bytes(op, fl.batch_size, self.seq)
+                t += iters * self.transport.round_comm_time(
+                    up, down, round_idx, k)
+            t += self.transport.round_comm_time(
+                self.model_bytes * fl.delta_density, self.model_bytes,
+                round_idx, k)
+            out.append(t)
+        return np.asarray(out)
+
+    def times(self, ops: List[int], round_idx: int):
+        """(total per-device round times, comm component)."""
+        if self.transport is not None:
+            comm = self.comm_times(ops, round_idx)
+            comp = (self.sim.round_compute_times(ops, round_idx)
+                    if self.sim is not None else np.zeros(self.K))
+            return comp + comm, comm
+        if self.sim is not None:
+            return self.sim.round_times(ops, round_idx), np.zeros(self.K)
+        return np.ones(self.K), np.zeros(self.K)
+
+
 def run_federated(
     cfg,
     clients_data: List[Dict[str, np.ndarray]],
@@ -132,57 +236,44 @@ def run_federated(
     seq = (clients_data[0]["tokens"].shape[1]
            if "tokens" in clients_data[0] else None)
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
-    delta_errors: List = [None] * K        # per-client error feedback state
+    track_errors = fl.delta_density < 1.0
+    delta_errors: List = (_zero_errors(params, K) if track_errors
+                          else [None] * K)
+    ctl = controller if controller is not None \
+        else getattr(planner, "controller", None)
 
     mgr = None
     start_round = 0
     if fl.checkpoint_dir:
         mgr = CheckpointManager(fl.checkpoint_dir)
         if resume:
-            restored, step = mgr.restore_latest(params)
+            restored, step = mgr.restore_latest(
+                _ckpt_tree(params, delta_errors, track_errors, ctl, K,
+                           template=True))
             if restored is not None:
-                params = restored
+                params = restored["params"]
+                if track_errors:
+                    delta_errors = restored["delta_errors"]
+                if ctl is not None:
+                    ctl.baselines = np.asarray(
+                        restored["controller"]["baselines"], np.float64)
+                    ctl.prev_actions = np.asarray(
+                        restored["controller"]["prev_actions"], np.float32)
                 start_round = int(step)
-                # fast-forward the deterministic loaders so a resumed run
-                # sees the exact batches of an uninterrupted one (bitwise
-                # resume — tests/test_runtime.py)
+                # fast-forward the deterministic loaders and the failure
+                # RNG so a resumed run sees the exact batches and aliveness
+                # masks of an uninterrupted one (bitwise resume —
+                # tests/test_runtime.py, tests/test_async.py)
                 loaders.skip(start_round * fl.local_iters)
+                for _ in range(start_round):
+                    injector.round_mask(K)
 
     # --- round time accounting -------------------------------------------
-    def comm_times(ops: List[int], round_idx: int) -> np.ndarray:
-        """Per-device comm time through the Transport: per-iteration cut
-        round-trips (acts out, grads back) + one weight-delta sync.  The
-        iteration count follows the sim's notion of a round when present so
-        compute and comm stay on the same clock."""
-        assert transport is not None
-        iters = sim.iterations if sim is not None else fl.local_iters
-        mb = float(model_bytes(params))
-        out = []
-        for k, op in enumerate(ops):
-            t = 0.0
-            if op < native_op:
-                up = program.cut_bytes(op, fl.batch_size, seq,
-                                       quantize=fl.quantize_transfer)
-                down = program.cut_bytes(op, fl.batch_size, seq)
-                t += iters * transport.round_comm_time(
-                    up, down, round_idx, k)
-            t += transport.round_comm_time(mb * fl.delta_density, mb,
-                                           round_idx, k)
-            out.append(t)
-        return np.asarray(out)
-
-    def round_times(ops: List[int], round_idx: int) -> np.ndarray:
-        if transport is not None:
-            comm = comm_times(ops, round_idx)
-            comp = (sim.round_compute_times(ops, round_idx)
-                    if sim is not None else np.zeros(K))
-            return comp + comm, comm
-        if sim is not None:
-            return sim.round_times(ops, round_idx), np.zeros(K)
-        return np.ones(K), np.zeros(K)
+    clock = RoundClock(program, fl, K, seq, params, sim=sim,
+                       transport=transport)
 
     # round-0 baselines (classic FL, no offloading)
-    times, _ = round_times([native_op] * K, 0)
+    times, _ = clock.times([native_op] * K, 0)
     if controller is not None and controller.baselines is None:
         controller.begin(times)
     plan = _resolve_planner(fl, native_op, planner, controller, sim)
@@ -204,7 +295,7 @@ def run_federated(
                                       [int(k) for k in np.flatnonzero(alive)],
                                       r, lr)
         # --- timing + straggler handling ------------------------------------
-        times, comm = round_times(ops, r)
+        times, comm = clock.times(ops, r)
         keep = np.ones(K, bool)
         if fl.deadline_factor > 0:
             keep = deadline_mask(times, fl.deadline_factor)
@@ -230,15 +321,24 @@ def run_federated(
         # --- evaluation + checkpoint ----------------------------------------
         acc = float(eval_fn(params, test_batch))
         hist["accuracy"].append(acc)
-        hist["round_time"].append(float(np.max(times[keep]))
-                                  if keep.any() else float(np.max(times)))
+        if keep.any():
+            wall = float(np.max(times[keep]))
+        elif fl.deadline_factor > 0:
+            # every client missed the deadline (e.g. dead links pushed all
+            # times to inf): the server waited the deadline out, not inf
+            wall = deadline_value(times, fl.deadline_factor)
+        else:
+            finite = times[np.isfinite(times)]
+            wall = float(finite.max()) if finite.size else 0.0
+        hist["round_time"].append(wall)
         hist["ops"].append(list(ops))
         hist["times"].append(times.copy())
         hist["comm_time"].append(comm.copy())
         hist["dropped"].append(int(K - keep.sum()))
         if mgr is not None and fl.checkpoint_every and \
                 (r + 1) % fl.checkpoint_every == 0:
-            mgr.save(params, r + 1)
+            mgr.save(_ckpt_tree(params, delta_errors, track_errors, ctl, K),
+                     r + 1)
 
     hist_np = {k: np.asarray(v) for k, v in hist.items()}
     hist_np["params"] = params

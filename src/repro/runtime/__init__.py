@@ -1,3 +1,8 @@
-from repro.runtime.straggler import deadline_mask, reweight  # noqa: F401
+from repro.runtime.straggler import (  # noqa: F401
+    deadline_mask,
+    deadline_value,
+    reweight,
+)
+from repro.runtime.scheduler import EventQueue  # noqa: F401
 from repro.runtime.failures import FailureInjector  # noqa: F401
 from repro.runtime.elastic import admit_client, remove_client  # noqa: F401

@@ -1,0 +1,57 @@
+"""Virtual-clock event scheduler for the asynchronous federated runtime.
+
+The async loop (``fl/async_loop.py``) models every client finishing its
+local split-training at its own Eq. 1 + Transport time rather than on a
+synchronous round barrier.  This module provides the discrete-event
+substrate: a monotonic virtual clock plus a priority queue of timestamped
+events, with deterministic FIFO tie-breaking (two events at the same
+virtual time pop in push order), so a run's event order is a pure function
+of the pushed times — no wall-clock, no RNG.
+
+Infinite timestamps are legal: a client behind a dead link
+(``Transport.transfer_time`` returns ``inf`` at zero bandwidth) simply
+never completes.  Consumers should check ``peek_time`` before popping —
+popping an ``inf`` event would advance the clock to ``inf`` — which is how
+the async loop detects a fully-stalled fleet.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from typing import Any, List, Tuple
+
+
+class EventQueue:
+    """Min-heap of ``(time, payload)`` events on a monotonic virtual clock."""
+
+    def __init__(self, start_time: float = 0.0):
+        self._heap: List[Tuple[float, int, Any]] = []
+        self._seq = 0
+        self.now = float(start_time)
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, time: float, payload: Any) -> None:
+        """Schedule ``payload`` at virtual ``time`` (>= now; inf allowed)."""
+        t = float(time)
+        if math.isnan(t):
+            raise ValueError("event time is NaN")
+        if t < self.now:
+            raise ValueError(
+                f"causality violation: event at t={t} pushed when the "
+                f"virtual clock is already at {self.now}")
+        heapq.heappush(self._heap, (t, self._seq, payload))
+        self._seq += 1
+
+    def peek_time(self) -> float:
+        """Timestamp of the next event (``inf`` if the queue is empty)."""
+        return self._heap[0][0] if self._heap else float("inf")
+
+    def pop(self) -> Tuple[float, Any]:
+        """Remove the earliest event and advance the clock to its time."""
+        if not self._heap:
+            raise IndexError("pop from an empty EventQueue")
+        t, _, payload = heapq.heappop(self._heap)
+        self.now = max(self.now, t)
+        return t, payload

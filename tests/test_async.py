@@ -1,0 +1,439 @@
+"""Async federated runtime (virtual clock + staleness-aware aggregation)
+and the determinism/accounting bugfix sweep that makes its times
+trustworthy: keyed jitter, zero-bandwidth links, full-state checkpoint
+resume, controller group clamping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.lm_small import LM16M
+from repro.configs.vgg import VGG5
+from repro.core import costmodel as cm
+from repro.core.controller import FedAdaptController
+from repro.core.env import SimulatedCluster
+from repro.data.synthetic import make_cifar_like, split_clients, token_dataset
+from repro.fl.async_loop import run_federated_async, staleness_weights
+from repro.fl.comm import Transport, constant_bandwidth
+from repro.fl.fedavg import fedavg_apply_deltas, fedavg_delta
+from repro.fl.loop import FLConfig, run_federated
+from repro.runtime.scheduler import EventQueue
+from repro.runtime.straggler import deadline_mask, deadline_value, reweight
+
+
+def _vgg_testbed(jitter=0.0, iterations=2, seed=0):
+    w = cm.vgg_workload(VGG5, batch_size=20)
+    devices = [cm.DeviceProfile("fast", 4e9, 75e6),
+               cm.DeviceProfile("mid", 2e9, 75e6),
+               cm.DeviceProfile("slow", 5e8, 75e6)]
+    return SimulatedCluster(w, devices, 8e9, VGG5.ops,
+                            iterations=iterations, jitter=jitter, seed=seed)
+
+
+class FixedSim:
+    """Deterministic stand-in cluster: hand-picked per-device durations so
+    virtual-clock traces are hand-computable."""
+
+    iterations = 1
+
+    def __init__(self, durations):
+        self.durations = np.asarray(durations, np.float64)
+
+    def bandwidths(self, round_idx):
+        return np.full(len(self.durations), 75e6)
+
+    def round_times(self, ops, round_idx):
+        return self.durations.copy()
+
+
+# =============================================================================
+# virtual-clock scheduler
+# =============================================================================
+def test_event_queue_orders_and_breaks_ties_fifo():
+    q = EventQueue()
+    q.push(2.0, "b")
+    q.push(1.0, "a")
+    q.push(2.0, "c")              # same time as "b": FIFO
+    assert q.peek_time() == 1.0
+    assert [q.pop()[1] for _ in range(3)] == ["a", "b", "c"]
+    assert q.now == 2.0
+    assert q.peek_time() == float("inf") and len(q) == 0
+
+
+def test_event_queue_rejects_past_and_nan_allows_inf():
+    q = EventQueue()
+    q.push(float("inf"), "never")         # dead link: legal timestamp
+    q.push(1.0, "x")
+    assert q.pop() == (1.0, "x")
+    with pytest.raises(ValueError, match="causality"):
+        q.push(0.5, "past")
+    with pytest.raises(ValueError, match="NaN"):
+        q.push(float("nan"), "bad")
+    assert q.peek_time() == float("inf")
+
+
+# =============================================================================
+# async == sync in the buffer_size=K, zero-discount special case
+# =============================================================================
+def test_async_buffer_k_reproduces_sync_history():
+    """buffer_size=K + staleness_discount=0 is a synchronous round barrier:
+    same seed => same history (bitwise for the sequential engine)."""
+    sim = _vgg_testbed(jitter=0.1)
+    clients = split_clients(make_cifar_like(180, seed=0), 3)
+    test = make_cifar_like(60, seed=9)
+    base = dict(rounds=3, local_iters=2, batch_size=20, mode="sfl",
+                static_op=2, augment=True, seed=0)
+    h_sync = run_federated(VGG5, clients, test, FLConfig(**base), sim=sim)
+    h_async = run_federated_async(VGG5, clients, test, FLConfig(**base),
+                                  sim=sim)
+    np.testing.assert_array_equal(h_sync["ops"], h_async["ops"])
+    np.testing.assert_array_equal(h_sync["accuracy"], h_async["accuracy"])
+    np.testing.assert_array_equal(h_sync["times"], h_async["times"])
+    # clock accumulation: (t + d) - t vs d, off by one ulp at most
+    np.testing.assert_allclose(h_sync["round_time"], h_async["round_time"],
+                               rtol=1e-12)
+    assert (h_async["staleness"] == 0).all()
+    np.testing.assert_allclose(h_async["virtual_time"],
+                               np.cumsum(h_sync["round_time"]), rtol=1e-12)
+
+
+def test_async_buffer_k_matches_sync_lm_batched_engine():
+    """Same equivalence through the batched fleet engine + a Transport
+    (fp32 tolerance: stacked vs listed aggregation order)."""
+    clients = split_clients(token_dataset(64, 32, LM16M.vocab_size, seed=0),
+                            4)
+    test = token_dataset(8, 32, LM16M.vocab_size, seed=9)
+    base = dict(rounds=3, local_iters=2, batch_size=4, lr=0.3, augment=False,
+                mode="sfl", static_op=3, engine="batched", seed=0)
+    tr = Transport(constant_bandwidth(50e6))
+    h_sync = run_federated(LM16M, clients, test, FLConfig(**base),
+                           transport=tr)
+    h_async = run_federated_async(LM16M, clients, test, FLConfig(**base),
+                                  transport=tr)
+    np.testing.assert_array_equal(h_sync["ops"], h_async["ops"])
+    np.testing.assert_allclose(h_sync["accuracy"], h_async["accuracy"],
+                               atol=5e-3)
+    np.testing.assert_allclose(h_sync["comm_time"], h_async["comm_time"],
+                               rtol=1e-12)
+
+
+# =============================================================================
+# staleness-aware aggregation
+# =============================================================================
+def test_staleness_weights_hand_computed():
+    # 3 clients: sizes (1, 1, 2), staleness (0, 1, 3), a=1
+    # raw = (1*1, 1*(1/2), 2*(1/4)) = (1, .5, .5) -> normalized (.5, .25, .25)
+    w = staleness_weights([1, 1, 2], [0, 1, 3], 1.0)
+    np.testing.assert_allclose(w, [1.0, 0.5, 0.5])
+    g = {"w": jnp.zeros(4)}
+    deltas = [{"w": jnp.full((4,), 1.0)}, {"w": jnp.full((4,), 2.0)},
+              {"w": jnp.full((4,), 4.0)}]
+    out = fedavg_apply_deltas(g, deltas, w)
+    # .5*1 + .25*2 + .25*4 = 2.0
+    np.testing.assert_allclose(np.asarray(out["w"]), 2.0, atol=1e-6)
+    # a=0: plain data-size FedAvg weighting regardless of staleness
+    np.testing.assert_allclose(staleness_weights([3, 1], [5, 0], 0.0),
+                               [3.0, 1.0])
+
+
+def test_fedavg_apply_deltas_matches_fedavg_delta():
+    g = {"w": jnp.arange(6.0)}
+    clients = [{"w": jnp.full((6,), float(i))} for i in (2, 5)]
+    deltas = [jax.tree_util.tree_map(lambda c, p: c - p, c, g)
+              for c in clients]
+    np.testing.assert_array_equal(
+        np.asarray(fedavg_apply_deltas(g, deltas, [3.0, 1.0])["w"]),
+        np.asarray(fedavg_delta(g, clients, [3.0, 1.0])["w"]))
+
+
+def test_async_virtual_clock_trace_hand_computed():
+    """3 clients with durations (1, 2, 7), buffer_size=1: the event order,
+    per-aggregation virtual times and staleness follow the hand trace."""
+    sim = FixedSim([1.0, 2.0, 7.0])
+    clients = split_clients(make_cifar_like(90, seed=0), 3)
+    test = make_cifar_like(30, seed=9)
+    fl = FLConfig(rounds=6, local_iters=1, batch_size=10, mode="sfl",
+                  static_op=2, augment=False, buffer_size=1,
+                  staleness_discount=0.5, seed=0)
+    h = run_federated_async(VGG5, clients, test, fl, sim=sim)
+    # t=1: A(v0, s=0) -> v1 | t=2: B(v0, s=1) -> v2 | t=2: A(v1, s=1) -> v3
+    # t=3: A(v3, s=0) -> v4 | t=4: B(v2, s=2) -> v5 | t=4: A(v4, s=1) -> v6
+    np.testing.assert_allclose(h["virtual_time"], [1, 2, 2, 3, 4, 4])
+    np.testing.assert_allclose(h["staleness"], [0, 1, 1, 0, 2, 1])
+    np.testing.assert_allclose(h["round_time"], [1, 1, 0, 1, 1, 0])
+    assert (h["dropped"] == 0).all()
+
+
+def test_async_max_staleness_drops_updates():
+    sim = FixedSim([1.0, 1.1, 20.0])     # extreme straggler
+    clients = split_clients(make_cifar_like(90, seed=0), 3)
+    test = make_cifar_like(30, seed=9)
+    fl = FLConfig(rounds=40, local_iters=1, batch_size=10, mode="sfl",
+                  static_op=2, augment=False, buffer_size=1,
+                  staleness_discount=1.0, max_staleness=3, seed=0)
+    h = run_federated_async(VGG5, clients, test, fl, sim=sim)
+    # the straggler reports once around t=20 with staleness ~30 >> 3
+    assert h["dropped"].sum() >= 1
+    assert h["staleness"].max() <= 3
+    assert len(h["accuracy"]) == 40
+
+
+def test_async_flushes_partial_buffer_when_dead_links_shrink_fleet():
+    """One dead link with buffer_size=K: the K-1 live clients' finished
+    updates are flushed (the live fleet shrank below buffer_size), not
+    discarded — training continues for all fl.rounds aggregations."""
+    clients = split_clients(make_cifar_like(120, seed=0), 3)
+    test = make_cifar_like(40, seed=9)
+    dead_fn = lambda r, d: 0.0 if d == 2 else 75e6   # noqa: E731
+    fl = FLConfig(rounds=4, local_iters=1, batch_size=10, mode="sfl",
+                  static_op=2, augment=False, seed=0)
+    h = run_federated_async(VGG5, clients, test, fl,
+                            transport=Transport(dead_fn))
+    assert len(h["accuracy"]) == 4
+    assert np.isfinite(h["virtual_time"]).all()
+    assert np.isinf(h["times"][-1, 2])       # the dead client never reports
+    assert h["accuracy"][-1] > h["accuracy"][0] - 0.05
+
+
+def test_async_does_not_corrupt_controller_baselines():
+    """The async loop mutates its times buffer in place; the controller's
+    round-0 baselines must be an independent copy."""
+    w = cm.vgg_workload(VGG5, batch_size=20)
+    sim = _vgg_testbed(iterations=2)
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=2,
+                             low_bw_threshold=None, seed=0)
+    clients = split_clients(make_cifar_like(180, seed=0), 3)
+    test = make_cifar_like(60, seed=9)
+    fl = FLConfig(rounds=3, local_iters=2, batch_size=20, mode="fedadapt",
+                  augment=False, buffer_size=1, seed=0)
+    run_federated_async(VGG5, clients, test, fl, sim=sim, controller=ctl)
+    baseline = sim.round_times([VGG5.ops[-1]] * 3, 0)
+    np.testing.assert_array_equal(ctl.baselines, baseline)
+
+
+def test_async_stalled_fleet_ends_early():
+    """All clients behind dead links: the run ends instead of spinning."""
+    clients = split_clients(make_cifar_like(60, seed=0), 2)
+    test = make_cifar_like(20, seed=9)
+    fl = FLConfig(rounds=5, local_iters=1, batch_size=10, mode="sfl",
+                  static_op=2, augment=False, seed=0)
+    h = run_federated_async(VGG5, clients, test, fl,
+                            transport=Transport(lambda r, d: 0.0))
+    assert len(h["accuracy"]) == 0
+    assert "params" in h
+
+
+def test_async_rejects_sync_only_knobs():
+    clients = split_clients(make_cifar_like(60, seed=0), 2)
+    test = make_cifar_like(20, seed=9)
+    for bad in (dict(deadline_factor=2.0), dict(fail_prob=0.5),
+                dict(checkpoint_dir="/tmp/nope"), dict(buffer_size=3)):
+        with pytest.raises(ValueError):
+            run_federated_async(
+                VGG5, clients, test,
+                FLConfig(rounds=1, local_iters=1, batch_size=10,
+                         augment=False, **bad))
+
+
+def test_async_partial_buffer_learns_and_orders_time():
+    """buffer_size < K: the server never waits for the slowest device, so
+    virtual time per aggregation is bounded by the fast clients."""
+    sim = _vgg_testbed(iterations=2)
+    clients = split_clients(make_cifar_like(180, seed=0), 3)
+    test = make_cifar_like(60, seed=9)
+    base = dict(rounds=6, local_iters=2, batch_size=20, mode="sfl",
+                static_op=2, augment=False, seed=0)
+    h_async = run_federated_async(
+        VGG5, clients, test,
+        FLConfig(buffer_size=2, staleness_discount=0.5, **base), sim=sim)
+    h_sync = run_federated(VGG5, clients, test, FLConfig(**base), sim=sim)
+    assert len(h_async["accuracy"]) == 6
+    assert h_async["accuracy"][-1] > h_async["accuracy"][0]
+    # same number of server steps in strictly less virtual time
+    assert h_async["virtual_time"][-1] < np.cumsum(h_sync["round_time"])[-1]
+
+
+# =============================================================================
+# bugfix sweep: keyed jitter determinism
+# =============================================================================
+def test_jitter_draws_keyed_by_round_and_device():
+    sim = _vgg_testbed(jitter=0.3, seed=5)
+    a = sim.round_times([2, 2, 2], 3)
+    b = sim.round_times([2, 2, 2], 3)
+    np.testing.assert_array_equal(a, b)          # same round: same jitter
+    c = sim.round_times([2, 2, 2], 4)
+    assert not np.array_equal(a, c)              # rounds differ
+    # compute-only times share the round's jitter stream (comm stripped)
+    comp = sim.round_compute_times([2, 2, 2], 3)
+    np.testing.assert_array_equal(comp, sim.round_compute_times([2, 2, 2], 3))
+    assert (comp < a).all()
+    # a freshly constructed sim replays the identical stream (resume)
+    sim2 = _vgg_testbed(jitter=0.3, seed=5)
+    np.testing.assert_array_equal(a, sim2.round_times([2, 2, 2], 3))
+    # different seeds still diverge
+    sim3 = _vgg_testbed(jitter=0.3, seed=6)
+    assert not np.array_equal(a, sim3.round_times([2, 2, 2], 3))
+
+
+# =============================================================================
+# bugfix sweep: zero-bandwidth links
+# =============================================================================
+def test_zero_bandwidth_transfer_is_inf_not_crash():
+    tr = Transport(lambda r, d: 0.0)
+    assert tr.transfer_time(1e6, 0, 0) == float("inf")
+    assert tr.round_comm_time(1e6, 1e6, 0, 0) == float("inf")
+
+
+def test_deadline_path_handles_inf_times():
+    times = np.asarray([1.0, 1.2, np.inf])
+    mask = deadline_mask(times, factor=2.0)
+    np.testing.assert_array_equal(mask, [True, True, False])
+    # all-inf: nobody is kept, weights are all-zero (no nan / divide-by-0)
+    all_dead = np.full(3, np.inf)
+    assert not deadline_mask(all_dead, 2.0).any()
+    w = reweight(np.ones(3), deadline_mask(all_dead, 2.0))
+    np.testing.assert_array_equal(w, np.zeros(3))
+    assert deadline_value(all_dead, 2.0) == float("inf")
+    assert deadline_value(times, 2.0) == pytest.approx(2.2)
+
+
+def test_sync_round_with_dead_link_drops_and_stays_finite():
+    """A device on a dead link (0 bps) gets inf times; the deadline path
+    drops it every round and round_time stays finite."""
+    clients = split_clients(make_cifar_like(120, seed=0), 3)
+    test = make_cifar_like(40, seed=9)
+    dead_fn = lambda r, d: 0.0 if d == 2 else 75e6   # noqa: E731
+    fl = FLConfig(rounds=3, local_iters=2, batch_size=10, mode="sfl",
+                  static_op=2, augment=False, deadline_factor=2.0, seed=0)
+    h = run_federated(VGG5, clients, test, fl, transport=Transport(dead_fn))
+    assert np.isfinite(h["round_time"]).all()
+    assert (h["dropped"] == 1).all()
+    assert np.isinf(h["times"][:, 2]).all()
+    assert h["accuracy"][-1] > 0
+
+
+# =============================================================================
+# bugfix sweep: full-state checkpoint resume
+# =============================================================================
+def _resume_base(sim):
+    clients = split_clients(make_cifar_like(180, seed=0), 3)
+    test = make_cifar_like(60, seed=9)
+    return clients, test
+
+
+def test_jittered_topk_checkpoint_resume_bitwise(tmp_path):
+    """The acceptance drill: jitter>0 + delta_density<1, checkpointed and
+    resumed mid-training == the uninterrupted run, bitwise (params history
+    and timing history)."""
+    def sim():
+        return _vgg_testbed(jitter=0.2, seed=3)
+    clients, test = _resume_base(sim())
+    base = dict(local_iters=2, batch_size=20, mode="sfl", static_op=2,
+                augment=True, delta_density=0.5, seed=0)
+    full = run_federated(VGG5, clients, test, FLConfig(rounds=6, **base),
+                         sim=sim())
+    ck = str(tmp_path / "ck")
+    run_federated(VGG5, clients, test,
+                  FLConfig(rounds=3, checkpoint_dir=ck, checkpoint_every=3,
+                           **base), sim=sim())
+    resumed = run_federated(VGG5, clients, test,
+                            FLConfig(rounds=6, checkpoint_dir=ck,
+                                     checkpoint_every=3, **base),
+                            sim=sim(), resume=True)
+    np.testing.assert_array_equal(resumed["accuracy"][-3:],
+                                  full["accuracy"][-3:])
+    np.testing.assert_array_equal(resumed["times"][-3:], full["times"][-3:])
+    np.testing.assert_array_equal(resumed["round_time"][-3:],
+                                  full["round_time"][-3:])
+
+
+def test_fedadapt_controller_state_survives_resume(tmp_path):
+    """Resume restores the controller's baselines + prev_actions, so the
+    planned OPs match the uninterrupted run."""
+    w = cm.vgg_workload(VGG5, batch_size=20)
+
+    def make():
+        devices = [cm.DeviceProfile("fast", 4e9, 75e6),
+                   cm.DeviceProfile("mid", 2e9, 75e6),
+                   cm.DeviceProfile("slow", 5e8, 75e6)]
+        sim = SimulatedCluster(w, devices, 8e9, VGG5.ops, iterations=2,
+                               seed=0)
+        ctl = FedAdaptController(w, VGG5.ops, num_groups=2,
+                                 low_bw_threshold=None, seed=0)
+        return sim, ctl
+
+    clients, test = _resume_base(None)
+    base = dict(local_iters=2, batch_size=20, mode="fedadapt", augment=False,
+                seed=0)
+    sim, ctl = make()
+    full = run_federated(VGG5, clients, test, FLConfig(rounds=4, **base),
+                         sim=sim, controller=ctl)
+    ck = str(tmp_path / "ck")
+    sim, ctl = make()
+    run_federated(VGG5, clients, test,
+                  FLConfig(rounds=2, checkpoint_dir=ck, checkpoint_every=2,
+                           **base), sim=sim, controller=ctl)
+    sim, ctl = make()
+    resumed = run_federated(VGG5, clients, test,
+                            FLConfig(rounds=4, checkpoint_dir=ck,
+                                     checkpoint_every=2, **base),
+                            sim=sim, controller=ctl, resume=True)
+    np.testing.assert_array_equal(resumed["ops"][-2:], full["ops"][-2:])
+    np.testing.assert_array_equal(resumed["accuracy"][-2:],
+                                  full["accuracy"][-2:])
+
+
+def test_failure_mask_stream_survives_resume(tmp_path):
+    """The failure-injection RNG is fast-forwarded on resume, so a resumed
+    run replays the uninterrupted run's aliveness masks."""
+    clients, test = _resume_base(None)
+    base = dict(local_iters=2, batch_size=20, mode="fl", augment=False,
+                fail_prob=0.4, seed=0)
+    full = run_federated(VGG5, clients, test, FLConfig(rounds=6, **base))
+    ck = str(tmp_path / "ck")
+    run_federated(VGG5, clients, test,
+                  FLConfig(rounds=3, checkpoint_dir=ck, checkpoint_every=3,
+                           **base))
+    resumed = run_federated(VGG5, clients, test,
+                            FLConfig(rounds=6, checkpoint_dir=ck,
+                                     checkpoint_every=3, **base),
+                            resume=True)
+    np.testing.assert_array_equal(resumed["dropped"][-3:],
+                                  full["dropped"][-3:])
+    np.testing.assert_array_equal(resumed["accuracy"][-3:],
+                                  full["accuracy"][-3:])
+
+
+# =============================================================================
+# bugfix sweep: controller group/slot overflow
+# =============================================================================
+def test_controller_single_group_with_throttled_device():
+    """num_groups=1 + a low-bandwidth device used to overflow to 2 groups,
+    overwriting the only obs slot and aliasing actions; now the clustering
+    is clamped to G."""
+    w = cm.vgg_workload(VGG5)
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=1,
+                             low_bw_threshold=25e6, seed=0)
+    ctl.begin([1.0, 2.0, 3.0])
+    plan = ctl.plan([1.0, 2.0, 3.0], [75e6, 10e6, 75e6], explore=False)
+    assert plan.grouping.num_groups <= 1
+    assert len(set(plan.ops)) == 1            # one group -> one OP
+    assert np.isfinite(plan.obs).all()
+    assert np.isfinite(ctl.feedback([1.0, 2.0, 3.0]))
+
+
+def test_controller_reserved_low_bw_group_still_separates():
+    """With G >= 2 the reserved low-bandwidth group still exists and never
+    pushes num_groups past G."""
+    w = cm.vgg_workload(VGG5)
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=2,
+                             low_bw_threshold=25e6, seed=0)
+    ctl.begin([1.0, 1.1, 3.0, 3.2])
+    plan = ctl.plan([1.0, 1.1, 3.0, 3.2], [75e6, 10e6, 75e6, 75e6],
+                    explore=False)
+    assert plan.grouping.num_groups == 2
+    assert plan.grouping.low_bw_group == 1
+    assert plan.grouping.assignments[1] == 1  # throttled device in low group
+    # all-throttled fleets collapse into the single low group, never > G
+    plan_all = ctl.plan([1.0, 1.1, 3.0, 3.2], [10e6] * 4, explore=False)
+    assert plan_all.grouping.num_groups <= 2
