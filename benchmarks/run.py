@@ -16,6 +16,7 @@ import traceback
 
 from benchmarks import paper_validation as pv
 from benchmarks.async_vs_sync import bench_async_vs_sync
+from benchmarks.server_step import bench_server_step
 
 
 def bench_roofline():
@@ -64,8 +65,11 @@ def bench_kernels():
         t0 = time.time()
         jax.block_until_ready(fn())
         names.append(f"{name}={1e3*(time.time()-t0):.0f}ms")
-    return 0.0, ("interpret-mode timings (CPU correctness mode, not TPU "
-                 "perf): " + " ".join(names))
+    from repro.kernels.compat import default_interpret
+    mode = "interpret (CPU correctness mode)" if default_interpret() \
+        else "compiled"
+    return 0.0, (f"{mode} timings via kernels/compat backend resolution: "
+                 + " ".join(names))
 
 
 BENCHES = {
@@ -87,6 +91,7 @@ BENCHES = {
     "overhead": pv.bench_overhead,
     # beyond-paper scenarios
     "async_vs_sync": bench_async_vs_sync,
+    "server_step": bench_server_step,
     # system benches
     "roofline": bench_roofline,
     "kernels": bench_kernels,

@@ -1,0 +1,162 @@
+"""Server-step latency: fused flat-buffer pipeline vs per-leaf reference.
+
+The fused path (fl/flatbuf.py) runs one round of server work — stack
+survivor deltas, error-feedback top-k, optional int8, weighted reduce,
+apply — as a constant number of jitted dispatches (rows_to_deltas +
+ServerStep + unflatten = 3), where the reference per-leaf tree_map path
+issues O(K x leaves) jnp ops.  This bench measures steady-state
+aggregation wall-clock for K in {4, 16, 64, 256} over two scenarios
+(plain weighted averaging; top-k error feedback + int8 wire format) and
+emits machine-readable ``BENCH_server_step.json``.
+
+    PYTHONPATH=src python -m benchmarks.server_step           # full sweep
+    PYTHONPATH=src python -m benchmarks.server_step --smoke   # CI: K=4 only
+
+Dispatch accounting: ``fused_dispatches`` is exact by construction (the
+three jitted entry points invoked per round; ``ServerStep.calls`` is
+asserted to advance by one).  ``reference_dispatch_floor`` is the K x
+leaves lower bound on the reference path's per-leaf op dispatches (each
+leaf additionally issues several jnp calls, so the true count is a small
+multiple).  Timings on CPU run the Pallas kernels in interpreter mode
+(kernels/compat.py); accelerator backends compile them, widening the gap.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.vgg import VGG5
+from repro.fl.flatbuf import get_server_step, reference_server_step
+from repro.fl.loop import _delta_trees
+from repro.models.split_program import get_split_program
+
+KS = (4, 16, 64, 256)
+# skip (model, K) cells whose stacked delta matrix would not fit comfortably
+MAX_STACK_BYTES = 512 * 1024 ** 2
+SCENARIOS = {
+    "avg": dict(density=1.0, quantize=False),
+    "topk_int8": dict(density=0.01, quantize=True),
+}
+
+
+def _client_rows(program, params, K: int) -> List:
+    """K perturbed parameter sets (what the fleet engines hand back)."""
+    keys = jax.random.split(jax.random.PRNGKey(1), K)
+    return [jax.tree_util.tree_map(
+        lambda p, kk=k: p + 0.01 * jax.random.normal(kk, p.shape,
+                                                     jnp.float32),
+        params) for k in keys]
+
+
+def _time(fn, reps: int) -> float:
+    jax.block_until_ready(fn())            # warm / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn())        # every rep fully retired
+    return (time.perf_counter() - t0) / reps * 1e3   # ms
+
+
+def bench_cell(program, params, K: int, density: float, quantize: bool,
+               reps: int) -> Dict:
+    layout = program.flat_layout(params)
+    rows = _client_rows(program, params, K)
+    weights = list(np.arange(1, K + 1, dtype=np.float64))
+    track = density < 1.0
+    err = jnp.zeros((K, layout.padded), jnp.float32) if track else None
+    all_ids = jnp.arange(K, dtype=jnp.int32)
+    g_flat = layout.flatten(params)
+    step = get_server_step(layout, density, quantize)
+
+    def fused_round():
+        deltas = layout.rows_to_deltas(rows, g_flat)
+        # gather the error rows like the real loops do — a fresh buffer per
+        # round, required because ServerStep donates them off-CPU
+        err_rows = None if err is None else err[all_ids]
+        new_g, new_err = step(g_flat, deltas, weights, err_rows)
+        return layout.unflatten(new_g), new_err
+
+    def reference_round():
+        return reference_server_step(
+            layout, params, _delta_trees(params, rows), weights, err,
+            density=density, quantize=quantize)
+
+    calls0 = step.calls
+    fused_ms = _time(fused_round, reps)
+    assert step.calls == calls0 + reps + 1   # ONE ServerStep dispatch/round
+    ref_ms = _time(reference_round, reps)
+    leaves = len(layout.shapes)
+    return {
+        "K": K, "n_params": layout.size, "padded": layout.padded,
+        "leaves": leaves, "density": density, "quantize": quantize,
+        "ref_ms": round(ref_ms, 3), "fused_ms": round(fused_ms, 3),
+        "speedup": round(ref_ms / fused_ms, 2) if fused_ms else float("inf"),
+        "fused_dispatches": 3,
+        "reference_dispatch_floor": K * leaves,
+    }
+
+
+def run(smoke: bool = False, out_path: str = None) -> Dict:
+    if out_path is None:
+        # smoke runs must not clobber the recorded full-sweep artifact
+        out_path = ("BENCH_server_step_smoke.json" if smoke
+                    else "BENCH_server_step.json")
+    models = [("vgg5", VGG5)]
+    if not smoke:
+        models.append(("llama3-8b-smoke", get_smoke_config("llama3-8b")))
+    ks = (4,) if smoke else KS
+    reps = 1 if smoke else 2
+    results = []
+    for name, cfg in models:
+        program = get_split_program(cfg)
+        params = program.init(jax.random.PRNGKey(0))
+        layout = program.flat_layout(params)
+        for K in ks:
+            if K * layout.padded * 4 > MAX_STACK_BYTES:
+                results.append({"model": name, "K": K,
+                                "skipped": "stacked deltas exceed "
+                                           f"{MAX_STACK_BYTES >> 20} MiB"})
+                continue
+            for scen, kw in SCENARIOS.items():
+                if smoke and scen != "avg":
+                    continue
+                cell = bench_cell(program, params, K, reps=reps, **kw)
+                cell.update(model=name, scenario=scen)
+                results.append(cell)
+                print(f"{name} K={K:<4d} {scen:<10s} "
+                      f"ref={cell['ref_ms']:8.1f}ms "
+                      f"fused={cell['fused_ms']:8.1f}ms "
+                      f"x{cell['speedup']}", flush=True)
+    payload = {"backend": jax.default_backend(), "smoke": smoke,
+               "results": results}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def bench_server_step():
+    """benchmarks/run.py hook: tiny sweep, CSV-derived summary."""
+    payload = run(smoke=True)
+    cells = [c for c in payload["results"] if "speedup" in c]
+    best = max(cells, key=lambda c: c["speedup"])
+    return 0.0, (f"{len(cells)} cells; fused=3 dispatches/round vs "
+                 f"reference floor K*leaves; best speedup x{best['speedup']} "
+                 f"({best['model']} K={best['K']} {best['scenario']})")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: K=4, averaging scenario only")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_server_step.json, "
+                         "or BENCH_server_step_smoke.json under --smoke)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

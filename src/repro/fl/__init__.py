@@ -4,6 +4,13 @@ from repro.fl.fedavg import (  # noqa: F401
     fedavg_delta_stacked,
     model_bytes,
 )
+from repro.fl.flatbuf import (  # noqa: F401
+    FlatLayout,
+    ServerStep,
+    get_server_step,
+    layout_of,
+    reference_server_step,
+)
 from repro.fl.fleet import (  # noqa: F401
     BatchedEngine,
     SequentialEngine,

@@ -19,7 +19,11 @@ the client was dispatched with) is weighted by ``n_k * (1+s_k)^-a`` where
 ``FLConfig.max_staleness`` are discarded.  With ``buffer_size=K`` and
 ``staleness_discount=0`` every dispatch is a synchronous round and the
 runtime reproduces ``run_federated``'s history exactly (the equivalence
-drill in tests/test_async.py).
+drill in tests/test_async.py).  The buffered aggregation itself runs
+through the same fused flat-buffer server step as the synchronous loop
+(``fl/flatbuf.py``, one compiled dispatch per aggregation; reports carry
+flat delta rows) — ``FLConfig.server_step="reference"`` selects the
+per-leaf baseline.
 
 The model updates are *real* JAX training through the same fleet engines
 as the synchronous loop (``FLConfig.engine``): all clients re-dispatched
@@ -42,9 +46,15 @@ from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
 from repro.data.loader import FleetLoader
 from repro.fl.comm import Transport
-from repro.fl.fedavg import fedavg_apply_deltas
+from repro.fl.flatbuf import get_server_step, reference_server_step
 from repro.fl.fleet import get_engine, rows_as_list
-from repro.fl.loop import FLConfig, RoundClock, _resolve_planner
+from repro.fl.loop import (
+    FLConfig,
+    RoundClock,
+    _delta_trees,
+    _resolve_planner,
+    _zero_errors,
+)
 from repro.fl.planner import Planner
 from repro.models.split_program import get_split_program
 from repro.runtime.scheduler import EventQueue
@@ -66,7 +76,8 @@ class _Report:
     client: int
     version: int      # params version the client was dispatched with
     op: int
-    delta: Any        # f32 param delta vs the dispatch-time params
+    delta: Any        # f32 param delta vs the dispatch-time params: a flat
+                      # layout row (fused server step) or a pytree (reference)
     time: float       # modeled duration (compute + comm) of this dispatch
     comm: float
 
@@ -105,6 +116,11 @@ def run_federated_async(
         raise ValueError("async checkpoint/resume is not supported yet")
 
     params = program.init(jax.random.PRNGKey(fl.seed))
+    if fl.server_step not in ("fused", "reference"):
+        raise ValueError(f"unknown server_step {fl.server_step!r}; "
+                         f"known: fused, reference")
+    fused = fl.server_step == "fused"
+    layout = program.flat_layout(params)
     loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
                                       seed=fl.seed)
     engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
@@ -114,7 +130,12 @@ def run_federated_async(
            if "tokens" in clients_data[0] else None)
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
     track_errors = fl.delta_density < 1.0
-    delta_errors: List = [None] * K
+    delta_errors = _zero_errors(K, layout) if track_errors else None
+    # the SAME cached compiled server step as the synchronous loop
+    # (fl/flatbuf.py) — sync and async aggregate through one executable
+    srv = get_server_step(layout, fl.delta_density, fl.quantize_deltas) \
+        if fused else None
+    g_flat = layout.flatten(params) if fused else None
     clock = RoundClock(program, fl, K, seq, params, sim=sim,
                        transport=transport)
 
@@ -150,12 +171,16 @@ def run_federated_async(
         idxs, rows = engine.run_round(params, loaders, ops, list(ks),
                                       version, lr)
         t_all, c_all = clock.times(ops, version)
-        trained = rows_as_list(rows, list(range(len(idxs))))
+        if fused:
+            # one dispatch for the whole cohort: flatten rows, subtract the
+            # dispatch-version flat global; each report carries its row
+            deltas_flat = layout.rows_to_deltas(rows, g_flat)
+            per_client = [deltas_flat[pos] for pos in range(len(idxs))]
+        else:
+            per_client = _delta_trees(
+                params, rows_as_list(rows, list(range(len(idxs)))))
         for pos, k in enumerate(idxs):
-            delta = jax.tree_util.tree_map(
-                lambda c, g: c.astype(jnp.float32) - g.astype(jnp.float32),
-                trained[pos], params)
-            rpt = _Report(k, version, int(ops[k]), delta,
+            rpt = _Report(k, version, int(ops[k]), per_client[pos],
                           float(t_all[k]), float(c_all[k]))
             queue.push(queue.now + rpt.time, rpt)
 
@@ -191,17 +216,25 @@ def run_federated_async(
                     fl.staleness_discount)):
                 w_full[e.client] = wk
             weights = reweight(w_full, w_full > 0)
+            w_list = [weights[e.client] for e in fresh]
+            ids = jnp.asarray(
+                np.asarray([e.client for e in fresh], np.int32))
+            err_rows = delta_errors[ids] if track_errors else None
+            if fused:
+                stacked = jnp.stack([e.delta for e in fresh])
+                g_flat, new_err = srv(g_flat, stacked, w_list, err_rows)
+                params = layout.unflatten(g_flat)
+                if not layout.exact_fp32:
+                    # keep the flat master equal to the rounded params
+                    # (see fl/loop.py; fp32 needs no resync)
+                    g_flat = layout.flatten(params)
+            else:
+                params, new_err = reference_server_step(
+                    layout, params, [e.delta for e in fresh], w_list,
+                    err_rows, density=fl.delta_density,
+                    quantize=fl.quantize_deltas)
             if track_errors:
-                from repro.kernels.topk_compress.ops import compress_tree
-            deltas = []
-            for e in fresh:
-                d = e.delta
-                if track_errors:
-                    d, delta_errors[e.client] = compress_tree(
-                        d, delta_errors[e.client], density=fl.delta_density)
-                deltas.append(d)
-            params = fedavg_apply_deltas(params, deltas,
-                                         [weights[e.client] for e in fresh])
+                delta_errors = delta_errors.at[ids].set(new_err)
             mean_stale = float(s.mean())
         else:
             mean_stale = 0.0

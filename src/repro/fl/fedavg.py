@@ -6,6 +6,13 @@ Fig. 9's accuracy parity holds).
 function serves (a) classic weight averaging, (b) straggler-dropped rounds
 with renormalized weights, and (c) compressed cross-pod sync (top-k deltas,
 kernels/topk_compress).
+
+These per-leaf tree_map functions are the *reference* server step: the
+round loops default to the fused flat-buffer pipeline (``fl/flatbuf.py``,
+one compiled dispatch per round) and fall back to these under
+``FLConfig.server_step="reference"``; ``reference_server_step`` there
+composes them with per-client compression.  Results agree to fp32
+tolerance (summation order).
 """
 from __future__ import annotations
 

@@ -1,0 +1,321 @@
+"""Flat-buffer server step: the whole aggregation round as ONE compiled
+program.
+
+The reference server step (``fl.fedavg`` + per-client ``compress_tree``)
+walks a Python loop of per-leaf, per-client jnp ops — O(K x leaves) device
+dispatches per round, which makes the *server* the slowest code in a repo
+whose premise (paper §IV) is that the server outpaces the IoT clients.
+This module replaces it with a flatten-once layout plus a fused pipeline:
+
+* ``FlatLayout`` — computed once per parameter structure and cached: every
+  leaf is assigned a block-aligned segment of one contiguous fp32 buffer
+  (offset table host-side, zero padding between segments).  ``flatten`` /
+  ``unflatten`` are bitwise inverses for fp32/bf16 params (pure
+  reshape/pad/concat — no arithmetic), so a round-trip through the flat
+  domain never perturbs a checkpoint.  Block alignment (default 1024, the
+  top-k block) means no compression block ever straddles two leaves, which
+  is what makes the fused top-k *equal* to the per-leaf reference — each
+  block's ``(valid, k)`` metadata comes from the true leaf size
+  (kernels/topk_compress density semantics).
+
+* ``ServerStep`` — one jitted, donated program over the flat buffer:
+  client deltas stacked on a leading axis ``(K, n)``, error-feedback
+  carry-in, block-local top-k sparsification (Stich et al.,
+  arXiv:1809.07599), optional int8 quantize->dequantize of the sent rows
+  (the wire format of a compressed delta upload), weighted reduction, and
+  apply-to-global — 1 device dispatch where the reference issues
+  O(K x leaves).  Plain averaging is a single (K,) @ (K, n) matvec; the
+  compression pipeline streams client rows through an in-program
+  ``lax.scan`` so peak memory stays O(n), not O(K x n).  Executables are
+  cached per ``(layout, density, quantize)`` by ``get_server_step`` and
+  per ``K`` by jax's jit cache, so sync (fl/loop.py), async
+  (fl/async_loop.py) and both fleet engines reuse the same compiled step
+  across rounds.
+
+Numerics contract: the fused weighted reduction is a single fp32 matvec
+where the reference accumulates client-by-client — results agree to fp32
+tolerance, not bitwise (the only place the PR 3 guarantees are relaxed;
+see docs/API.md).  Sync and async stay *bitwise equal to each other*
+because both call the same compiled programs on the same operands, and
+checkpoint-resume stays bitwise because flatten/unflatten are exact.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.topk_compress.ops import (
+    compress_tree,
+    density_block_meta,
+    topk_compress_flat,
+)
+
+Params = Any
+
+
+class FlatLayout:
+    """Flatten-once layout for one parameter structure: per-leaf
+    (shape, dtype, offset, size) with offsets aligned to ``block`` so no
+    compression block straddles a leaf boundary.  Instances are cached by
+    ``layout_of`` — hold onto one and its jitted flatten/unflatten
+    executables amortize across every round of every loop."""
+
+    def __init__(self, tree: Params, block: int = 1024):
+        leaves, treedef = jax.tree_util.tree_flatten(tree)
+        self.block = int(block)
+        self.treedef = treedef
+        self.shapes = tuple(tuple(l.shape) for l in leaves)
+        self.dtypes = tuple(jnp.asarray(l).dtype for l in leaves)
+        self.sizes = tuple(int(np.prod(s)) if s else 1 for s in self.shapes)
+        self.segs = tuple(-(-sz // self.block) * self.block
+                          for sz in self.sizes)
+        offs, off = [], 0
+        for seg in self.segs:
+            offs.append(off)
+            off += seg
+        self.offsets = tuple(offs)
+        self.size = int(sum(self.sizes))      # true element count
+        self.padded = int(off)                # buffer length (block-aligned)
+        # fp32 params round-trip through the flat domain without rounding,
+        # so a flat master buffer never drifts from the unflattened params;
+        # narrower dtypes need a resync after every unflatten (fl/loop.py)
+        self.exact_fp32 = all(d == jnp.float32 for d in self.dtypes)
+        self._meta: Dict[float, np.ndarray] = {}
+        self._flatten = jax.jit(self._flatten_impl)
+        self._flatten_stacked = jax.jit(self._flatten_stacked_impl)
+        self._unflatten = jax.jit(self._unflatten_impl)
+        self._deltas_list = jax.jit(self._deltas_list_impl)
+        self._deltas_stacked = jax.jit(self._deltas_stacked_impl)
+
+    # -- bitwise flatten / unflatten --------------------------------------
+    def _flatten_impl(self, tree: Params) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(tree)
+        parts = []
+        for leaf, sz, seg in zip(leaves, self.sizes, self.segs):
+            v = jnp.asarray(leaf).reshape(-1).astype(jnp.float32)
+            parts.append(jnp.pad(v, (0, seg - sz)) if seg > sz else v)
+        return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
+
+    def _flatten_stacked_impl(self, tree: Params) -> jnp.ndarray:
+        leaves = jax.tree_util.tree_leaves(tree)
+        K = leaves[0].shape[0]
+        parts = []
+        for leaf, sz, seg in zip(leaves, self.sizes, self.segs):
+            v = jnp.asarray(leaf).reshape(K, -1).astype(jnp.float32)
+            parts.append(jnp.pad(v, ((0, 0), (0, seg - sz)))
+                         if seg > sz else v)
+        return jnp.concatenate(parts, axis=1) if len(parts) > 1 else parts[0]
+
+    def _unflatten_impl(self, buf: jnp.ndarray) -> Params:
+        leaves = [buf[off:off + sz].reshape(shape).astype(dtype)
+                  for off, sz, shape, dtype in
+                  zip(self.offsets, self.sizes, self.shapes, self.dtypes)]
+        return jax.tree_util.tree_unflatten(self.treedef, leaves)
+
+    def _deltas_list_impl(self, rows: tuple, g_flat: jnp.ndarray
+                          ) -> jnp.ndarray:
+        stacked = jnp.stack([self._flatten_impl(r) for r in rows])
+        return stacked - g_flat[None]
+
+    def _deltas_stacked_impl(self, tree: Params, g_flat: jnp.ndarray
+                             ) -> jnp.ndarray:
+        return self._flatten_stacked_impl(tree) - g_flat[None]
+
+    def flatten(self, tree: Params) -> jnp.ndarray:
+        """Pytree -> contiguous fp32 ``(padded,)`` buffer (one dispatch)."""
+        return self._flatten(tree)
+
+    def unflatten(self, buf: jnp.ndarray) -> Params:
+        """Exact inverse of ``flatten`` (padding dropped, dtypes restored)."""
+        return self._unflatten(buf)
+
+    def rows_to_deltas(self, rows, g_flat: jnp.ndarray) -> jnp.ndarray:
+        """Client parameter rows -> stacked fp32 deltas ``(R, padded)`` vs
+        the flat global, in one dispatch.  ``rows`` is either a list of
+        per-client pytrees (sequential engine) or a ``StackedRows``-style
+        pytree with a leading client axis (batched engine)."""
+        from repro.fl.fleet import StackedRows
+        if isinstance(rows, StackedRows):
+            return self._deltas_stacked(rows.tree, g_flat)
+        return self._deltas_list(tuple(rows), g_flat)
+
+    # -- compression metadata ---------------------------------------------
+    def block_meta(self, density: float) -> np.ndarray:
+        """Per-block ``(valid, k)`` rows over the whole buffer: each leaf's
+        blocks get their budget from the leaf's true (unpadded) element
+        count, and inter-leaf padding lanes are masked out."""
+        key = round(float(density), 12)
+        if key not in self._meta:
+            self._meta[key] = np.concatenate(
+                [density_block_meta(sz, self.block, density)
+                 for sz in self.sizes], axis=0)
+        return self._meta[key]
+
+
+_LAYOUT_CACHE: Dict[tuple, FlatLayout] = {}
+
+
+def layout_of(tree: Params, block: int = 1024) -> FlatLayout:
+    """Resolve (and cache) the FlatLayout for a parameter structure.  Two
+    trees with the same treedef/shapes/dtypes share one layout — and with
+    it the jitted flatten/unflatten/server-step executables."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    key = (treedef, tuple(tuple(l.shape) for l in leaves),
+           tuple(str(jnp.asarray(l).dtype) for l in leaves), int(block))
+    if key not in _LAYOUT_CACHE:
+        _LAYOUT_CACHE[key] = FlatLayout(tree, block=block)
+    return _LAYOUT_CACHE[key]
+
+
+def _normalized_f64(weights: Sequence[float]) -> np.ndarray:
+    w = np.asarray(weights, np.float64)
+    return w / w.sum()
+
+
+class ServerStep:
+    """The fused server round over the flat buffer.  Call with the flat
+    global, stacked deltas, per-client weights and (when ``density < 1``)
+    the matching error-feedback rows; returns the new flat global and the
+    new error rows.  ``calls`` counts jitted invocations — the whole round
+    is exactly one."""
+
+    def __init__(self, layout: FlatLayout, density: float = 1.0,
+                 quantize: bool = False, interpret: Optional[bool] = None):
+        self.layout = layout
+        self.density = float(density)
+        self.quantize = bool(quantize)
+        self.interpret = interpret
+        self.track_errors = self.density < 1.0
+        self.calls = 0
+        if self.track_errors:
+            meta = layout.block_meta(self.density)
+            self._meta = meta
+            self._kmax = int(meta[:, 1].max())
+        # donate the big (K, n) buffers (deltas, error rows) — they are
+        # consumed by the step; skipped on CPU where donation is a no-op
+        donate = () if jax.default_backend() == "cpu" else (1, 3)
+        self._step = jax.jit(self._step_impl, donate_argnums=donate)
+
+    def _step_impl(self, g: jnp.ndarray, deltas: jnp.ndarray,
+                   w: jnp.ndarray, err: Optional[jnp.ndarray]):
+        block = self.layout.block
+        if not self.track_errors and not self.quantize:
+            # plain weighted averaging: ONE (K,) @ (K, n) matvec
+            return g + w @ deltas, None
+
+        # compression pipeline: stream client rows through a lax.scan so the
+        # peak working set stays O(n) instead of O(K x n) — several (K, n)
+        # fp32 intermediates (carried, compressed, sent) would otherwise
+        # dwarf the deltas themselves.  Still ONE compiled dispatch; the
+        # weighted reduction accumulates in client order (the same order as
+        # the reference loop).
+        def one(acc, xs):
+            if self.track_errors:
+                d, e, wi = xs
+                carried = d + e
+                comp = topk_compress_flat(carried[None], self._meta,
+                                          self._kmax, block=block,
+                                          interpret=self.interpret)[0]
+            else:
+                d, wi = xs
+                carried, comp = d, d
+            if self.quantize:
+                from repro.kernels.quant_transfer.ops import (
+                    dequantize,
+                    quantize,
+                )
+                rows = comp.reshape(-1, block)
+                q, s = quantize(rows, interpret=self.interpret)
+                sent = dequantize(q, s,
+                                  interpret=self.interpret).reshape(-1)
+            else:
+                sent = comp
+            new_e = carried - sent if self.track_errors else None
+            return acc + wi * sent, new_e
+
+        xs = (deltas, err, w) if self.track_errors else (deltas, w)
+        upd, new_err = jax.lax.scan(one, jnp.zeros_like(g), xs)
+        return g + upd, new_err
+
+    def __call__(self, g_flat: jnp.ndarray, deltas: jnp.ndarray,
+                 weights: Sequence[float],
+                 errors: Optional[jnp.ndarray] = None
+                 ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        w = jnp.asarray(_normalized_f64(weights), jnp.float32)
+        self.calls += 1
+        return self._step(g_flat, deltas, w, errors)
+
+
+_STEP_CACHE: Dict[tuple, ServerStep] = {}
+
+
+def get_server_step(layout: FlatLayout, density: float = 1.0,
+                    quantize: bool = False,
+                    interpret: Optional[bool] = None) -> ServerStep:
+    """Cached ServerStep per (layout, density, quantize) — the per-``K``
+    executable cache lives inside the step's jit (shapes are part of the
+    XLA cache key), so every loop and engine shares one compiled program
+    per distinct client count."""
+    key = (layout, round(float(density), 12), bool(quantize), interpret)
+    if key not in _STEP_CACHE:
+        _STEP_CACHE[key] = ServerStep(layout, density=density,
+                                      quantize=quantize, interpret=interpret)
+    return _STEP_CACHE[key]
+
+
+# =============================================================================
+# reference path: the pre-fused per-leaf tree_map pipeline (kept as the
+# equivalence baseline for tests and benchmarks — O(K x leaves) dispatches)
+# =============================================================================
+def quantize_delta_flat(layout: FlatLayout, tree: Params,
+                        interpret: Optional[bool] = None) -> Params:
+    """int8 wire format of one delta, unfused: flatten, rowwise-quantize in
+    ``block`` chunks, dequantize, unflatten.  Row partition matches the
+    fused path exactly, so scales (and therefore values) agree."""
+    from repro.kernels.quant_transfer.ops import dequantize, quantize
+    flat = layout.flatten(tree)
+    rows = flat.reshape(-1, layout.block)
+    q, s = quantize(rows, interpret=interpret)
+    return layout.unflatten(dequantize(q, s, interpret=interpret).reshape(-1))
+
+
+def reference_server_step(
+    layout: FlatLayout,
+    params: Params,
+    deltas: List[Params],
+    weights: Sequence[float],
+    errors: Optional[jnp.ndarray],
+    density: float = 1.0,
+    quantize: bool = False,
+    interpret: Optional[bool] = None,
+) -> Tuple[Params, Optional[jnp.ndarray]]:
+    """Per-leaf, per-client baseline with the same algorithm as the fused
+    ``ServerStep``: error-feedback carry, per-leaf top-k (density from true
+    leaf sizes), optional int8 wire quantization, weighted apply.  ``errors``
+    are flat ``(len(deltas), padded)`` rows (the loop's canonical error
+    representation); returns updated ``(params, error_rows)``."""
+    track = density < 1.0
+    sents, new_err_rows = [], []
+    for i, delta in enumerate(deltas):
+        if track:
+            err_tree = layout.unflatten(errors[i])
+            carried = jax.tree_util.tree_map(
+                lambda d, e: d.astype(jnp.float32) + e.astype(jnp.float32),
+                delta, err_tree)
+            comp, _ = compress_tree(delta, err_tree, density=density,
+                                    block=layout.block, interpret=interpret)
+        else:
+            carried, comp = None, delta
+        sent = (quantize_delta_flat(layout, comp, interpret=interpret)
+                if quantize else comp)
+        if track:
+            new_err = jax.tree_util.tree_map(lambda c, s: c - s, carried,
+                                             sent)
+            new_err_rows.append(layout.flatten(new_err))
+        sents.append(sent)
+    from repro.fl.fedavg import fedavg_apply_deltas
+    new_params = fedavg_apply_deltas(params, sents, weights)
+    return new_params, (jnp.stack(new_err_rows) if track else None)

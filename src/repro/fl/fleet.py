@@ -24,7 +24,10 @@ interchangeable engines implement it (``FLConfig.engine``):
 Both engines return ``(idxs, rows)``: the trained client indices and their
 post-round parameters — a list of pytrees (sequential) or one pytree with a
 leading client axis (batched).  ``rows_as_list`` / ``take_rows`` adapt
-either form for the aggregation paths in fl/loop.py.
+either form for the aggregation paths: the fused flat-buffer server step
+(fl/flatbuf.py, the default) stacks rows straight into its ``(K, n)``
+delta matrix via ``FlatLayout.rows_to_deltas``, the reference per-leaf
+path consumes the per-client list.
 """
 from __future__ import annotations
 
@@ -242,8 +245,8 @@ def take_rows(rows, positions: Sequence[int]):
 
 
 def rows_as_list(rows, positions: Sequence[int]) -> List[Params]:
-    """Per-client pytrees for paths that need them (e.g. per-client top-k
-    delta compression with error feedback)."""
+    """Per-client pytrees for paths that need them (e.g. the reference
+    per-client top-k delta compression with error feedback)."""
     if isinstance(rows, StackedRows):
         return [jax.tree_util.tree_map(lambda a: a[i], rows.tree)
                 for i in positions]

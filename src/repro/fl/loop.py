@@ -24,6 +24,15 @@ iteration), the ``"batched"`` engine vmaps OP groups over a scanned round
 history up to float32 summation order (benchmarks/fleet_scaling.py measures
 the throughput gap).
 
+The server step — aggregate survivor deltas, top-k error-feedback
+sparsification, optional int8 delta quantization, apply to the global —
+runs by default as ONE compiled flat-buffer program per round
+(``fl/flatbuf.py``, selected by ``FLConfig.server_step``): O(1) device
+dispatches instead of the reference per-leaf tree_map path's O(K x leaves).
+``server_step="reference"`` keeps the per-leaf baseline for equivalence
+tests and benchmarks; the two agree to fp32 tolerance (the fused weighted
+reduction is a single matvec, so client summation order differs).
+
 Fault tolerance is first-class: deadline straggler drops, failure injection,
 atomic checkpoints with bitwise resume (params plus the run's aux state:
 top-k error feedback, controller normalizer, failure-RNG position), and
@@ -48,8 +57,9 @@ from repro.checkpoint import CheckpointManager
 from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
 from repro.data.loader import FleetLoader
+from repro.fl.fedavg import fedavg_delta_stacked, model_bytes
 from repro.fl.comm import Transport
-from repro.fl.fedavg import fedavg_delta, fedavg_delta_stacked, model_bytes
+from repro.fl.flatbuf import get_server_step, reference_server_step
 from repro.fl.fleet import StackedRows, get_engine, rows_as_list, take_rows
 from repro.fl.planner import FedAdaptPlanner, Planner, StaticPlanner
 from repro.models.split_program import get_split_program
@@ -72,8 +82,15 @@ class FLConfig:
     augment: bool = True             # horizontal flip p=0.5 (paper §V-B)
     quantize_transfer: bool = False  # int8 smashed data across the cut
     delta_density: float = 1.0       # <1: top-k sparsified weight deltas
+    quantize_deltas: bool = False    # int8 wire format for the delta sync
+                                     # (4x fewer upload bytes; quant error is
+                                     # folded into the error feedback when
+                                     # delta_density < 1)
     engine: str = "sequential"       # local-training engine: sequential |
                                      # batched (vmap'd OP groups, fl/fleet.py)
+    server_step: str = "fused"       # aggregation path: fused (one compiled
+                                     # flat-buffer program, fl/flatbuf.py) |
+                                     # reference (per-leaf tree_map baseline)
     # --- async runtime knobs (fl/async_loop.run_federated_async) ----------
     buffer_size: int = 0             # aggregate once this many client
                                      # updates arrive; 0 -> K (and with
@@ -105,26 +122,21 @@ def _resolve_planner(
     return StaticPlanner(native_op)
 
 
-def _compress_deltas(params, client_params, errors, idxs, density: float):
-    """Top-k sparsify each client's weight delta with per-client error
-    feedback (the residual is re-added next round — Stich et al., the
-    property that keeps FedAvg convergence under sparsification)."""
-    from repro.kernels.topk_compress.ops import compress_tree
-    out = []
-    for k, cp in zip(idxs, client_params):
-        delta = jax.tree_util.tree_map(lambda c, g: c - g, cp, params)
-        comp, errors[k] = compress_tree(delta, errors[k], density=density)
-        out.append(jax.tree_util.tree_map(lambda g, d: g + d, params, comp))
-    return out
+def _zero_errors(K: int, layout) -> jnp.ndarray:
+    """Eagerly zero-initialized per-client error-feedback state, one flat
+    row per client in the server-step layout: identical numerics to a lazy
+    ``None`` start (top-k adds zeros), but a *fixed* array shape so the
+    state can live in checkpoints and be gathered/scattered by the fused
+    server step in one dispatch."""
+    return jnp.zeros((K, layout.padded), jnp.float32)
 
 
-def _zero_errors(params, K: int) -> List:
-    """Eagerly zero-initialized per-client error-feedback state: identical
-    numerics to the lazy ``None`` start (``compress_tree`` adds zeros), but
-    a *fixed* pytree structure so the state can live in checkpoints."""
+def _delta_trees(params, client_params: List) -> List:
+    """Per-client fp32 weight deltas vs the current global (the reference
+    server step's per-leaf input; the fused path never materializes these)."""
     return [jax.tree_util.tree_map(
-        lambda a: jnp.zeros(a.shape, jnp.float32), params)
-        for _ in range(K)]
+        lambda c, g: c.astype(jnp.float32) - g.astype(jnp.float32),
+        cp, params) for cp in client_params]
 
 
 def _ckpt_tree(params, delta_errors, track_errors: bool, ctl, K: int,
@@ -188,9 +200,13 @@ class RoundClock:
                 down = self.program.cut_bytes(op, fl.batch_size, self.seq)
                 t += iters * self.transport.round_comm_time(
                     up, down, round_idx, k)
-            t += self.transport.round_comm_time(
-                self.model_bytes * fl.delta_density, self.model_bytes,
-                round_idx, k)
+            up = self.model_bytes * fl.delta_density
+            if fl.quantize_deltas:
+                # int8 wire format: 1 byte/entry vs fp32's 4 (the per-block
+                # fp32 scales are ~0.1% overhead and are not modelled)
+                up *= 0.25
+            t += self.transport.round_comm_time(up, self.model_bytes,
+                                                round_idx, k)
             out.append(t)
         return np.asarray(out)
 
@@ -227,6 +243,11 @@ def run_federated(
     program = get_split_program(cfg)
     K = len(clients_data)
     params = program.init(jax.random.PRNGKey(fl.seed))
+    if fl.server_step not in ("fused", "reference"):
+        raise ValueError(f"unknown server_step {fl.server_step!r}; "
+                         f"known: fused, reference")
+    fused = fl.server_step == "fused"
+    layout = program.flat_layout(params)
     loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
                                       seed=fl.seed)
     engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
@@ -237,8 +258,7 @@ def run_federated(
            if "tokens" in clients_data[0] else None)
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
     track_errors = fl.delta_density < 1.0
-    delta_errors: List = (_zero_errors(params, K) if track_errors
-                          else [None] * K)
+    delta_errors = _zero_errors(K, layout) if track_errors else None
     ctl = controller if controller is not None \
         else getattr(planner, "controller", None)
 
@@ -253,7 +273,8 @@ def run_federated(
             if restored is not None:
                 params = restored["params"]
                 if track_errors:
-                    delta_errors = restored["delta_errors"]
+                    delta_errors = jnp.asarray(restored["delta_errors"],
+                                               jnp.float32)
                 if ctl is not None:
                     ctl.baselines = np.asarray(
                         restored["controller"]["baselines"], np.float64)
@@ -271,6 +292,13 @@ def run_federated(
     # --- round time accounting -------------------------------------------
     clock = RoundClock(program, fl, K, seq, params, sim=sim,
                        transport=transport)
+
+    # --- server step: one compiled flat-buffer program per round ----------
+    # (fl/flatbuf.py; cached per layout/density/quantize, reused across
+    # rounds and shared with the async runtime)
+    step = get_server_step(layout, fl.delta_density, fl.quantize_deltas) \
+        if fused else None
+    g_flat = layout.flatten(params) if fused else None
 
     # round-0 baselines (classic FL, no offloading)
     times, _ = clock.times([native_op] * K, 0)
@@ -305,18 +333,44 @@ def run_federated(
         surv_idx = [idxs[i] for i in kept_pos]
         surv_w = [weights[k] for k in surv_idx]
         if kept_pos:
-            if fl.delta_density < 1.0:
-                # top-k error feedback is per-client state: unstack if needed
-                survivors = _compress_deltas(params,
-                                             rows_as_list(rows, kept_pos),
-                                             delta_errors, surv_idx,
-                                             fl.delta_density)
-                params = fedavg_delta(params, survivors, surv_w)
-            else:
+            if fused:
+                # fused flat-buffer server step: stack survivor deltas,
+                # top-k error feedback, optional int8, weighted apply — all
+                # one compiled dispatch (plus one stack, one unflatten)
+                deltas = layout.rows_to_deltas(take_rows(rows, kept_pos),
+                                               g_flat)
+                ids = jnp.asarray(np.asarray(surv_idx, np.int32))
+                err_rows = delta_errors[ids] if track_errors else None
+                g_flat, new_err = step(g_flat, deltas, surv_w, err_rows)
+                if track_errors:
+                    delta_errors = delta_errors.at[ids].set(new_err)
+                params = layout.unflatten(g_flat)
+                if not layout.exact_fp32:
+                    # narrower param dtypes round on unflatten: re-derive
+                    # the flat master from the rounded params so checkpoints
+                    # (which store params) stay a complete description of
+                    # the run state; for fp32 this would be a bitwise no-op
+                    g_flat = layout.flatten(params)
+            elif not track_errors and not fl.quantize_deltas and \
+                    isinstance(rows, StackedRows):
+                # reference path, plain averaging, batched engine: keep the
+                # pre-fused stacked tensordot (one op per leaf) rather than
+                # degrading to a K-wide per-client loop
                 survivors = take_rows(rows, kept_pos)
-                params = (fedavg_delta_stacked(params, survivors.tree, surv_w)
-                          if isinstance(survivors, StackedRows) else
-                          fedavg_delta(params, survivors, surv_w))
+                params = fedavg_delta_stacked(params, survivors.tree,
+                                              surv_w)
+            else:
+                # reference per-leaf path (O(K x leaves) dispatches): the
+                # equivalence baseline for tests and benchmarks
+                ids = jnp.asarray(np.asarray(surv_idx, np.int32))
+                err_rows = delta_errors[ids] if track_errors else None
+                params, new_err = reference_server_step(
+                    layout, params, _delta_trees(
+                        params, rows_as_list(rows, kept_pos)),
+                    surv_w, err_rows, density=fl.delta_density,
+                    quantize=fl.quantize_deltas)
+                if track_errors:
+                    delta_errors = delta_errors.at[ids].set(new_err)
         plan.feedback(times)
         # --- evaluation + checkpoint ----------------------------------------
         acc = float(eval_fn(params, test_batch))

@@ -2,15 +2,18 @@
 
 ``flash_attention`` takes the model-zoo layout (B, S, H, D) and handles the
 layout transpose, GQA head grouping, padding, and the interpret-mode switch
-(CPU validation vs TPU execution).
+(``interpret=None`` resolves per backend via ``kernels.compat``: compiled
+on TPU, interpreter elsewhere).
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.compat import resolve_interpret
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
 
 
@@ -25,12 +28,13 @@ def flash_attention(
     softcap: float = 0.0,
     block_q: int = 128,
     block_k: int = 128,
-    interpret: bool = True,
+    interpret: Optional[bool] = None,
 ) -> jnp.ndarray:
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
     out = flash_attention_bhsd(
         qt, kt, vt, causal=causal, window=window, softcap=softcap,
-        block_q=block_q, block_k=block_k, interpret=interpret)
+        block_q=block_q, block_k=block_k,
+        interpret=resolve_interpret(interpret))
     return out.transpose(0, 2, 1, 3)

@@ -1,13 +1,17 @@
 """jit'd wrappers: int8 transfer compression + straight-through fake-quant
-used inside ``models.split.split_loss`` (differentiable through the cut)."""
+used inside ``models.split.split_loss`` (differentiable through the cut).
+
+``interpret=None`` resolves per backend via ``kernels.compat``: compiled
+on TPU, interpreter elsewhere (explicit bool overrides for tests)."""
 from __future__ import annotations
 
 from functools import partial
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.compat import resolve_interpret
 from repro.kernels.quant_transfer.quant_transfer import (
     dequantize_pallas,
     quantize_pallas,
@@ -15,7 +19,7 @@ from repro.kernels.quant_transfer.quant_transfer import (
 
 
 @partial(jax.jit, static_argnames=("interpret",))
-def quantize(x: jnp.ndarray, interpret: bool = True
+def quantize(x: jnp.ndarray, interpret: Optional[bool] = None
              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Any-shape tensor -> (int8 same-shape, fp32 scales over leading dims)."""
     shape = x.shape
@@ -26,14 +30,14 @@ def quantize(x: jnp.ndarray, interpret: bool = True
     if pad:
         flat = jnp.pad(flat, ((0, pad), (0, 0)))
     q, s = quantize_pallas(flat, block_rows=min(br, flat.shape[0]),
-                           interpret=interpret)
+                           interpret=resolve_interpret(interpret))
     return (q[:R].reshape(shape),
             s[:R].reshape(shape[:-1]))
 
 
 @partial(jax.jit, static_argnames=("interpret",))
 def dequantize(q: jnp.ndarray, scales: jnp.ndarray,
-               interpret: bool = True) -> jnp.ndarray:
+               interpret: Optional[bool] = None) -> jnp.ndarray:
     shape = q.shape
     flat = q.reshape(-1, shape[-1])
     sflat = scales.reshape(-1)
@@ -44,7 +48,7 @@ def dequantize(q: jnp.ndarray, scales: jnp.ndarray,
         flat = jnp.pad(flat, ((0, pad), (0, 0)))
         sflat = jnp.pad(sflat, (0, pad))
     out = dequantize_pallas(flat, sflat, block_rows=min(br, flat.shape[0]),
-                            interpret=interpret)
+                            interpret=resolve_interpret(interpret))
     return out[:R].reshape(shape)
 
 

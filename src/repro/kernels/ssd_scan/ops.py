@@ -1,16 +1,22 @@
-"""jit'd wrapper for the SSD-scan kernel (handles seq padding)."""
+"""jit'd wrapper for the SSD-scan kernel (handles seq padding).
+
+``interpret=None`` resolves per backend via ``kernels.compat``: compiled
+on TPU, interpreter elsewhere."""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.compat import resolve_interpret
 from repro.kernels.ssd_scan.ssd_scan import ssd_scan_pallas
 
 
 @partial(jax.jit, static_argnames=("chunk", "interpret"))
-def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = True):
+def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128,
+             interpret: Optional[bool] = None):
     """x (B,S,H,P), dt (B,S,H), A (H,), Bm/Cm (B,S,N) -> y (B,S,H,P)."""
     B, S, H, P = x.shape
     q = min(chunk, S)
@@ -20,5 +26,6 @@ def ssd_scan(x, dt, A, Bm, Cm, chunk: int = 128, interpret: bool = True):
         dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
         Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
         Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
-    y = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=q, interpret=interpret)
+    y = ssd_scan_pallas(x, dt, A, Bm, Cm, chunk=q,
+                        interpret=resolve_interpret(interpret))
     return y[:, :S]

@@ -3,6 +3,23 @@
 ``compress_tree`` sparsifies a gradient/delta pytree leaf-wise and returns
 (compressed_tree, new_error_feedback); the residual is re-added next round
 (error feedback keeps FedAvg convergence — Stich et al., arXiv:1809.07599).
+
+Density semantics (the density-skew fix): the per-block keep budget ``k``
+is computed from the *true* (unpadded) element count of each block, and
+padded lanes are masked out of the selection.  A 100-element leaf at
+density 0.01 keeps 1 entry — not ``int(0.01 * 1024) = 10`` — and tail
+blocks of a padded leaf keep ``~density * tail`` entries instead of the
+full-block budget.
+
+Backend dispatch (``interpret=None``, via ``kernels.compat``): compiled
+Pallas kernel on TPU; elsewhere the *vectorized jnp reference* — Pallas
+interpret mode unrolls the grid at trace time, which is pathological for
+production-size buffers (a 16-client VGG round is ~10k blocks), while the
+batched reference is one ``top_k`` over all blocks.  Both implement the
+identical selection (same per-block threshold, same earlier-index-wins tie
+guard; drilled against each other in tests/test_kernels.py).  An explicit
+``interpret=True`` forces the Pallas kernel body through the interpreter —
+the kernel-validation path for tests.
 """
 from __future__ import annotations
 
@@ -11,34 +28,126 @@ from typing import Any, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.kernels.compat import default_interpret, resolve_interpret
 from repro.kernels.topk_compress.topk_compress import topk_compress_pallas
 
 
-@partial(jax.jit, static_argnames=("k", "block", "interpret"))
-def topk_compress(x: jnp.ndarray, k: int, block: int = 1024,
-                  interpret: bool = True) -> jnp.ndarray:
+def _topk_blocks_ref(xb: jnp.ndarray, meta: jnp.ndarray,
+                     kmax: int) -> jnp.ndarray:
+    """Vectorized jnp implementation of the kernel's selection over all
+    blocks at once: ``xb`` (nb, block) fp32, ``meta`` (nb, 2) int32 rows of
+    (valid, k).  Bit-identical outcomes to ``_topk_kernel``."""
+    nb, block = xb.shape
+    valid = meta[:, :1]
+    ks = meta[:, 1:]
+    lane = jnp.arange(block, dtype=jnp.int32)[None]
+    mag = jnp.where(lane < valid, jnp.abs(xb), -jnp.inf)
+    top = jax.lax.top_k(mag, kmax)[0]                      # (nb, kmax) desc
+    kth = jnp.take_along_axis(top, ks - 1, axis=1)         # (nb, 1)
+    above = (mag > kth).astype(jnp.int32)
+    eq = (mag == kth).astype(jnp.int32)
+    quota = ks - jnp.sum(above, axis=1, keepdims=True)
+    eq_rank = jnp.cumsum(eq, axis=1) * eq                  # earlier idx wins
+    keep = (mag > kth) | ((mag == kth) & (eq_rank <= quota) & (eq_rank > 0))
+    return jnp.where(keep, xb, 0.0)
+
+
+def _run_topk(flat: jnp.ndarray, meta: np.ndarray, kmax: int, block: int,
+              interpret: Optional[bool]) -> jnp.ndarray:
+    """Route one padded 1-D buffer through the backend-appropriate
+    implementation (module docstring)."""
+    if interpret is None and default_interpret():
+        nb = flat.shape[0] // block
+        return _topk_blocks_ref(flat.reshape(nb, block),
+                                jnp.asarray(meta, jnp.int32),
+                                kmax).reshape(-1)
+    return topk_compress_pallas(flat, jnp.asarray(meta, jnp.int32),
+                                kmax=kmax, block=block,
+                                interpret=resolve_interpret(interpret))
+
+
+def keep_count(density: float, valid: int) -> int:
+    """Per-block keep budget from the true element count: at least one entry
+    always survives (a leaf never vanishes from the update)."""
+    return max(1, min(int(valid), int(density * valid + 1e-9)))
+
+
+def density_block_meta(n: int, block: int, density: float) -> np.ndarray:
+    """(ceil(n/block), 2) int32 rows of ``(valid, k)`` for an ``n``-element
+    buffer tiled into fixed-size blocks (the last block may be partial).
+    Vectorized ``keep_count`` — million-block layouts build in one numpy
+    expression."""
+    nb = -(-n // block)
+    valid = np.minimum(block, n - block * np.arange(nb, dtype=np.int64))
+    k = np.maximum(1, np.minimum(
+        valid, (density * valid + 1e-9).astype(np.int64)))
+    return np.stack([valid, k], axis=1).astype(np.int32)
+
+
+def _padded_1d(x: jnp.ndarray, block: int) -> Tuple[jnp.ndarray, int, int]:
+    """Flatten to fp32 1-D and pad to a whole number of blocks of size
+    ``min(block, n)`` (a leaf smaller than a block is a single short block)."""
     flat = x.reshape(-1).astype(jnp.float32)
     n = flat.shape[0]
     b = min(block, n)
     pad = (-n) % b
     if pad:
         flat = jnp.pad(flat, (0, pad))
-    kk = min(k, b)
-    out = topk_compress_pallas(flat, kk, block=b, interpret=interpret)
+    return flat, n, b
+
+
+@partial(jax.jit, static_argnames=("k", "block", "interpret"))
+def topk_compress(x: jnp.ndarray, k: int, block: int = 1024,
+                  interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Keep the ``k`` largest-|.| entries per full block of ``block``
+    elements; short/tail blocks keep a proportionally scaled budget
+    (``k * valid / block``) over their true lanes only."""
+    flat, n, b = _padded_1d(x, block)
+    nb = flat.shape[0] // b
+    valid = np.minimum(b, n - b * np.arange(nb, dtype=np.int64))
+    ks = np.maximum(1, np.minimum(
+        valid, (k * valid / b + 1e-9).astype(np.int64)))
+    meta = np.stack([valid, ks], axis=1).astype(np.int32)
+    out = _run_topk(flat, meta, int(ks.max()), b, interpret)
     return out[:n].reshape(x.shape).astype(x.dtype)
 
 
+@partial(jax.jit, static_argnames=("density", "block", "interpret"))
+def topk_compress_density(x: jnp.ndarray, density: float, block: int = 1024,
+                          interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Density-form entry point: every block keeps
+    ``max(1, int(density * true_block_elems))`` entries."""
+    flat, n, b = _padded_1d(x, block)
+    meta = density_block_meta(n, b, density)
+    out = _run_topk(flat, meta, int(meta[:, 1].max()), b, interpret)
+    return out[:n].reshape(x.shape).astype(x.dtype)
+
+
+def topk_compress_flat(buf: jnp.ndarray, meta: np.ndarray, kmax: int,
+                       block: int = 1024,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Top-k over a flat-buffer batch (fl/flatbuf.py): ``buf`` is ``(R, n)``
+    with ``n % block == 0`` and ``meta`` the per-block ``(valid, k)`` table
+    of ONE row (every row shares the layout).  One pallas_call over all
+    ``R * n/block`` blocks — traceable inside a larger jitted program."""
+    R, n = buf.shape
+    tiled = np.tile(np.asarray(meta, np.int32), (R, 1))
+    out = _run_topk(buf.reshape(R * n), tiled, kmax, block, interpret)
+    return out.reshape(R, n)
+
+
 def compress_tree(tree: Any, error: Optional[Any], density: float = 0.01,
-                  block: int = 1024, interpret: bool = True
+                  block: int = 1024, interpret: Optional[bool] = None
                   ) -> Tuple[Any, Any]:
-    """Error-feedback top-k over every leaf; density = k/block."""
-    k = max(1, int(density * block))
+    """Error-feedback top-k over every leaf; per-block k from the true
+    (unpadded) element count — see the module docstring."""
 
     def one(leaf, err):
         carried = leaf.astype(jnp.float32) + (
             0.0 if err is None else err.astype(jnp.float32))
-        comp = topk_compress(carried, k, block, interpret)
+        comp = topk_compress_density(carried, density, block, interpret)
         return comp.astype(leaf.dtype), (carried - comp)
 
     if error is None:

@@ -8,8 +8,16 @@ TPU-native design: a *global* top-k needs a sort (hostile to the VPU); a
 block-local top-k is embarrassingly parallel over VMEM tiles and empirically
 matches global top-k for gradient compression (Deep Gradient Compression,
 arXiv:1712.01887, uses the same local-selection trick).  Inside the kernel
-the k-th-largest threshold is found with ``k`` iterations of masked max —
-vector ops only, no sort.
+the k-th-largest threshold is found with masked-max iterations — vector ops
+only, no sort.
+
+Each block carries a ``(valid, k)`` metadata pair: ``valid`` masks padded
+lanes out of the selection (a tail block of a padded buffer must not let
+zeros/garbage compete for the top-k or inflate the survivor count), and
+``k`` is the per-block keep budget — computed by the caller from the *true*
+(unpadded) element count so the effective density is honest for leaves
+smaller than a block (the density-skew fix; repro.kernels.topk_compress.ops
+builds the meta table).
 """
 from __future__ import annotations
 
@@ -21,42 +29,57 @@ from jax.experimental import pallas as pl
 from repro.kernels.compat import CompilerParams
 
 
-def _topk_kernel(x_ref, o_ref, *, k: int):
+def _topk_kernel(x_ref, meta_ref, o_ref, *, kmax: int):
     x = x_ref[0].astype(jnp.float32)          # (block,)
-    mag = jnp.abs(x)
+    valid = meta_ref[0, 0]                    # true lanes in this block
+    kk = meta_ref[0, 1]                       # keep budget, 1 <= kk <= valid
+    lane = jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], 1), 0)[:, 0]
+    mag = jnp.where(lane < valid, jnp.abs(x), -jnp.inf)
 
-    # k-th largest via k rounds of masked max (no sort on the VPU)
-    def body(i, carry):
-        remaining, kth = carry
+    # kk-th largest *entry* via masked-max rounds (no sort on the VPU).
+    # Each round peels one distinct magnitude and advances the cumulative
+    # entry count; the threshold is the magnitude at which that count
+    # crosses kk (duplicates may cover several ranks in one round, so
+    # counting rounds instead of entries would overshoot).  kmax static
+    # iterations always suffice: every round retires >= 1 entry.
+    def body(_, carry):
+        remaining, kth, cnt = carry
         cur = jnp.max(remaining)
+        ncur = jnp.sum((remaining == cur).astype(jnp.int32))
+        kth = jnp.where((cnt < kk) & (cnt + ncur >= kk), cur, kth)
         remaining = jnp.where(remaining >= cur, -jnp.inf, remaining)
-        return remaining, cur
+        return remaining, kth, cnt + ncur
 
-    _, kth = jax.lax.fori_loop(0, k, body, (mag, jnp.float32(jnp.inf)))
-    keep = mag >= kth
-    # tie guard: never keep more than k entries — drop later-indexed ties
+    _, kth, _ = jax.lax.fori_loop(
+        0, kmax, body, (mag, jnp.float32(jnp.inf), jnp.int32(0)))
+    # tie guard: never keep more than kk entries — drop later-indexed ties
     above = (mag > kth).astype(jnp.int32)
     eq = (mag == kth).astype(jnp.int32)
-    quota = k - jnp.sum(above)
+    quota = kk - jnp.sum(above)
     eq_rank = jnp.cumsum(eq) * eq             # 1-based rank among ties
     keep = (mag > kth) | ((mag == kth) & (eq_rank <= quota) & (eq_rank > 0))
     o_ref[0] = jnp.where(keep, x, 0.0).astype(o_ref.dtype)
 
 
-def topk_compress_pallas(x: jnp.ndarray, k: int, block: int = 1024,
+def topk_compress_pallas(x: jnp.ndarray, meta: jnp.ndarray, kmax: int,
+                         block: int = 1024,
                          interpret: bool = False) -> jnp.ndarray:
+    """``x`` (n,) with ``n % block == 0``; ``meta`` (n/block, 2) int32 rows of
+    ``(valid_lanes, k)`` per block; ``kmax`` static upper bound on k."""
     n = x.shape[0]
     assert n % block == 0, f"n {n} % block {block} != 0 (pad upstream)"
     nb = n // block
-    kernel = functools.partial(_topk_kernel, k=k)
+    assert meta.shape == (nb, 2), f"meta {meta.shape} != ({nb}, 2)"
+    kernel = functools.partial(_topk_kernel, kmax=kmax)
     out = pl.pallas_call(
         kernel,
         grid=(nb,),
-        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0))],
+        in_specs=[pl.BlockSpec((1, block), lambda i: (i, 0)),
+                  pl.BlockSpec((1, 2), lambda i: (i, 0))],
         out_specs=pl.BlockSpec((1, block), lambda i: (i, 0)),
         out_shape=jax.ShapeDtypeStruct((nb, block), x.dtype),
         compiler_params=CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
-    )(x.reshape(nb, block))
+    )(x.reshape(nb, block), meta.astype(jnp.int32))
     return out.reshape(n)

@@ -78,6 +78,15 @@ class SplitProgram:
         inits = [self.init(k, dtype) for k in jax.random.split(key, n)]
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *inits)
 
+    def flat_layout(self, params: Params, block: int = 1024):
+        """The flatten-once server-step layout for this program's parameter
+        structure (``fl.flatbuf.FlatLayout``): one contiguous fp32 buffer
+        with a block-aligned per-leaf offset table, cached per structure so
+        every loop/engine shares the same jitted flatten/unflatten and the
+        same compiled fused server step."""
+        from repro.fl.flatbuf import layout_of
+        return layout_of(params, block=block)
+
     def client_forward(self, params: Params, batch: Dict, op: int):
         """Device stage: inputs -> cut payload (a pytree of arrays)."""
         raise NotImplementedError

@@ -96,14 +96,70 @@ def test_ssd_scan_vs_sequential(B, S, H, P, N, chunk, dtype):
 # =============================================================================
 # topk compress
 # =============================================================================
+@pytest.mark.parametrize("interpret", [True, None],
+                         ids=["pallas-interpret", "backend-default"])
 @pytest.mark.parametrize("n,k,block", [(2048, 16, 1024), (4096, 64, 512),
                                        (1024, 1, 1024), (512, 512, 512)])
-def test_topk_vs_ref(n, k, block):
+def test_topk_vs_ref(n, k, block, interpret):
+    """Both implementations — the Pallas kernel body (interpret=True) and
+    the backend-default (vectorized jnp on CPU) — match the oracle."""
     x = jax.random.normal(jax.random.fold_in(KEY, n + k), (n,))
-    out = topk_compress(x, k, block)
+    out = topk_compress(x, k, block, interpret=interpret)
     ref = topk_compress_ref(x, min(k, block), block)
     np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
     assert int(jnp.sum(out != 0)) == (n // block) * min(k, block)
+
+
+def test_topk_kernel_matches_jnp_path_masked_blocks():
+    """Pallas kernel vs the vectorized jnp path on the hard cases: partial
+    tails, sub-block buffers, and ties crossing the threshold."""
+    from repro.kernels.topk_compress.ops import topk_compress_density
+    for n, d, seed in [(1500, 0.02, 0), (100, 0.05, 1), (2048, 0.25, 2)]:
+        x = jax.random.normal(jax.random.fold_in(KEY, seed), (n,))
+        np.testing.assert_array_equal(
+            np.asarray(topk_compress_density(x, d, interpret=True)),
+            np.asarray(topk_compress_density(x, d)))
+    # crafted ties: duplicated magnitudes straddle the k-th threshold
+    t = jnp.asarray([5.0, -3.0, 3.0, 3.0, -5.0, 1.0, 0.5, 0.25] * 16)
+    np.testing.assert_array_equal(
+        np.asarray(topk_compress(t, 3, 128, interpret=True)),
+        np.asarray(topk_compress(t, 3, 128)))
+
+
+def test_topk_density_from_true_size():
+    """The density-skew fix: k comes from the true (unpadded) element count,
+    so leaves smaller than a block and padded tails keep ~density * n
+    entries — not the full-block budget."""
+    from repro.kernels.topk_compress.ops import topk_compress_density
+    y = jax.random.normal(jax.random.fold_in(KEY, 1), (100,))
+    out = topk_compress_density(y, 0.05)
+    assert int(jnp.sum(out != 0)) == 5          # was min(51, 100) pre-fix
+    # multi-block with a partial tail: 1500 = 1024 + 476
+    z = jax.random.normal(jax.random.fold_in(KEY, 2), (1500,))
+    out2 = topk_compress_density(z, 0.02)
+    assert int(jnp.sum(out2 != 0)) == \
+        int(0.02 * 1024 + 1e-9) + int(0.02 * 476 + 1e-9)
+    # kept entries really are the largest |.| within each block
+    kept = np.flatnonzero(np.asarray(out2[:1024]))
+    thresh = np.sort(np.abs(np.asarray(z[:1024])))[-len(kept)]
+    assert (np.abs(np.asarray(z))[kept] >= thresh).all()
+
+
+def test_topk_explicit_k_scales_tail_budget():
+    """Explicit-k API on a padded tail: the tail block keeps a
+    proportionally scaled budget over its true lanes only."""
+    x = jax.random.normal(jax.random.fold_in(KEY, 3), (1536,))
+    out = topk_compress(x, 64, 1024)           # tail: 512 lanes -> k=32
+    assert int(jnp.sum(out[:1024] != 0)) == 64
+    assert int(jnp.sum(out[1024:] != 0)) == 32
+
+
+def test_compress_tree_density_honest_per_leaf():
+    tree = {"big": jax.random.normal(KEY, (2048,)),
+            "small": jax.random.normal(jax.random.fold_in(KEY, 4), (40,))}
+    comp, _ = compress_tree(tree, None, density=0.05)
+    assert int(jnp.sum(comp["big"] != 0)) == 2 * int(0.05 * 1024)
+    assert int(jnp.sum(comp["small"] != 0)) == 2   # max(1, int(.05*40))
 
 
 def test_error_feedback_telescopes():
