@@ -17,6 +17,7 @@ import traceback
 from benchmarks import paper_validation as pv
 from benchmarks.async_vs_sync import bench_async_vs_sync
 from benchmarks.server_step import bench_server_step
+from benchmarks.serving import bench_serving
 
 
 def bench_roofline():
@@ -92,6 +93,7 @@ BENCHES = {
     # beyond-paper scenarios
     "async_vs_sync": bench_async_vs_sync,
     "server_step": bench_server_step,
+    "serving": bench_serving,
     # system benches
     "roofline": bench_roofline,
     "kernels": bench_kernels,

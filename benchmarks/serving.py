@@ -1,0 +1,222 @@
+"""Serving tail latency under load: continuous batching + live hot swap.
+
+Drives ``repro.serving``'s ``ServeEngine`` with seeded Poisson traffic at a
+sweep of load levels (fractions of the engine's saturated capacity) and
+reports p50/p95/p99 request latency, time-to-first-token, tokens/s, and
+slot occupancy — plus one level where a ``ParamStore`` publishes a fresh
+params version mid-run every few virtual seconds, measuring the latency
+cost of hot swapping the model while requests are in flight.
+
+Methodology (two clocks, deliberately):
+
+* **Real clock for costs.**  The per-operation costs — one right-padded
+  prefill, one batched decode step over the full slot pool, one flat-buffer
+  hot swap — are calibrated once from ``time.perf_counter`` medians on this
+  machine, post-compilation.
+* **Virtual clock for the experiment.**  The load sweep then runs on
+  ``runtime.scheduler.EventQueue`` with those calibrated costs
+  (``serving.ServeCosts``), so queueing delay, occupancy and the reported
+  percentiles are a pure function of ``(traffic seed, costs)`` —
+  re-runnable bitwise on any machine, while the costs stay honest to this
+  one.  Every request's tokens are still really computed by the engine.
+
+Capacity model: a full decode step emits ``slots`` tokens in ``t_decode``
+and admissions serialize at ``t_prefill``, so the saturated request rate is
+``min(slots / (mean_gen * t_decode), 1 / t_prefill)``; load levels are
+fractions of that.
+
+    PYTHONPATH=src python -m benchmarks.serving           # full sweep
+    PYTHONPATH=src python -m benchmarks.serving --smoke   # CI: tiny model
+
+Emits machine-readable ``BENCH_serving.json`` (``_smoke`` suffix under
+``--smoke`` so CI never clobbers the recorded artifact).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import statistics
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.configs.lm_small import LM16M
+from repro.models.split_program import get_split_program
+from repro.serving import (
+    ParamStore,
+    ServeCosts,
+    ServeEngine,
+    TrafficGenerator,
+    latency_stats,
+    serve,
+)
+
+LOAD_FRACTIONS = (0.25, 0.6, 0.9)
+SWAP_LOAD_FRACTION = 0.6        # the hot-swap level runs at moderate load
+SWAPS_PER_RUN = 8               # published versions per hot-swap level
+
+
+def _engine(cfg, params, slots: int) -> ServeEngine:
+    return ServeEngine(cfg, params, slots=slots, max_prompt=32, max_seq=64)
+
+
+def calibrate(cfg, params, layout, slots: int, reps: int) -> Dict[str, float]:
+    """Measure the real per-op cost of prefill / full-pool decode / hot swap
+    (post-compilation ``perf_counter`` medians, seconds)."""
+    eng = _engine(cfg, params, slots)
+    rng = np.random.RandomState(0)
+    prompt = rng.randint(0, cfg.vocab_size, 32).astype(np.int32)
+
+    # fill the pool so decode timings reflect a saturated step; gen=32
+    # (the max for a 32-token prompt) outlasts every timed step below
+    for rid in range(slots):
+        eng.submit(rid, prompt, 32)
+    eng.step()                                    # compile decode
+
+    t_prefill = []
+    for r in range(reps):
+        free = int(np.nonzero(eng.active)[0][0])  # recycle one slot
+        eng.active[free] = False
+        t0 = time.perf_counter()
+        eng.submit(slots + r, prompt, 32)
+        jax.block_until_ready(eng.cache)
+        t_prefill.append(time.perf_counter() - t0)
+
+    t_decode = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        eng.step()
+        jax.block_until_ready(eng.cache)
+        t_decode.append(time.perf_counter() - t0)
+
+    store = ParamStore(layout)
+    store.publish(params)
+    eng.maybe_swap(store)                         # compile unflatten
+    t_swap = []
+    for _ in range(reps):
+        store.publish(params)
+        t0 = time.perf_counter()
+        eng.maybe_swap(store)
+        jax.block_until_ready(jax.tree_util.tree_leaves(eng.params)[0])
+        t_swap.append(time.perf_counter() - t0)
+
+    return {"prefill": statistics.median(t_prefill),
+            "decode": statistics.median(t_decode),
+            "swap": statistics.median(t_swap),
+            "saturated_tokens_per_s": slots / statistics.median(t_decode)}
+
+
+def bench_level(cfg, params, layout, slots: int, rate: float, load: float,
+                n_requests: int, costs: ServeCosts, hotswap: bool,
+                seed: int) -> Dict:
+    """One load level: fresh engine, seeded traffic, virtual-clock serve."""
+    eng = _engine(cfg, params, slots)
+    traffic = TrafficGenerator(rate=rate, n_requests=n_requests,
+                               vocab_size=cfg.vocab_size,
+                               prompt_lens=(8, 16, 32), gen_lens=(4, 8, 16),
+                               seed=seed)
+    requests = traffic.generate()
+    store = None
+    published = [0]
+    if hotswap:
+        store = ParamStore(layout)
+        # emulate the training loop aggregating concurrently: a new version
+        # every 1/SWAPS_PER_RUN of the traffic's arrival span
+        period = (n_requests / rate) / SWAPS_PER_RUN
+
+        def on_tick(now: float) -> None:
+            want = int(now / period)
+            if want > published[0]:
+                published[0] = want
+                scale = jnp.float32(1.0 + 1e-4 * want)
+                store.publish(jax.tree_util.tree_map(
+                    lambda p: p * scale, params))
+    else:
+        on_tick = None
+
+    result = serve(eng, requests, costs, store=store, on_tick=on_tick)
+    counts = eng.compile_counts()
+    assert all(v <= 1 for v in counts.values()), \
+        f"recompilation during the sweep: {counts}"
+    stats = latency_stats(result)
+    stats.update(rate=round(rate, 4), load=load, slots=slots,
+                 hotswap=hotswap, versions_published=published[0],
+                 makespan=round(result["makespan"], 3),
+                 decode_steps=result["decode_steps"])
+    return {k: (round(v, 4) if isinstance(v, float) else v)
+            for k, v in stats.items()}
+
+
+def run(smoke: bool = False, out_path: str = None) -> Dict:
+    if out_path is None:
+        out_path = "BENCH_serving_smoke.json" if smoke \
+            else "BENCH_serving.json"
+    cfg = get_smoke_config("qwen3-0.6b") if smoke else LM16M
+    slots = 4 if smoke else 8
+    n_requests = 12 if smoke else 60
+    reps = 3 if smoke else 9
+
+    program = get_split_program(cfg)
+    params = program.init(jax.random.PRNGKey(0))
+    layout = program.flat_layout(params)
+    cal = calibrate(cfg, params, layout, slots, reps)
+    mean_gen = float(np.mean((4, 8, 16)))
+    capacity = min(slots / (mean_gen * cal["decode"]), 1.0 / cal["prefill"])
+    costs = ServeCosts(prefill=cal["prefill"], decode=cal["decode"],
+                       swap=cal["swap"])
+    print(f"calibrated on {cfg.name}: prefill={cal['prefill']*1e3:.2f}ms "
+          f"decode={cal['decode']*1e3:.2f}ms swap={cal['swap']*1e3:.2f}ms "
+          f"saturated={cal['saturated_tokens_per_s']:.0f} tok/s "
+          f"capacity={capacity:.2f} req/s", flush=True)
+
+    levels = []
+    sweep = [(f, False) for f in LOAD_FRACTIONS] + [(SWAP_LOAD_FRACTION, True)]
+    if smoke:
+        sweep = [(0.6, False), (0.6, True)]
+    for load, hotswap in sweep:
+        cell = bench_level(cfg, params, layout, slots, load * capacity, load,
+                           n_requests, costs, hotswap, seed=42)
+        levels.append(cell)
+        tag = " +hotswap" if hotswap else ""
+        print(f"load={load:.2f}{tag:<9s} p50={cell['p50_latency']:7.3f}s "
+              f"p95={cell['p95_latency']:7.3f}s p99={cell['p99_latency']:7.3f}s "
+              f"tok/s={cell['tokens_per_s']:7.2f} "
+              f"occ={cell['mean_occupancy']:.2f} swaps={cell['swaps']}",
+              flush=True)
+
+    payload = {"backend": jax.default_backend(), "smoke": smoke,
+               "model": cfg.name, "slots": slots, "n_requests": n_requests,
+               "calibration": {k: round(v, 6) for k, v in cal.items()},
+               "capacity_req_per_s": round(capacity, 4),
+               "levels": levels}
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def bench_serving():
+    """benchmarks/run.py hook: tiny sweep, CSV-derived summary."""
+    payload = run(smoke=True)
+    plain = next(c for c in payload["levels"] if not c["hotswap"])
+    swapped = next(c for c in payload["levels"] if c["hotswap"])
+    return 0.0, (f"{len(payload['levels'])} levels on {payload['model']}; "
+                 f"load=0.6: p99={plain['p99_latency']:.3f}s "
+                 f"{plain['tokens_per_s']:.1f} tok/s; "
+                 f"+hotswap({swapped['swaps']} swaps): "
+                 f"p99={swapped['p99_latency']:.3f}s")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: tiny model, 2 levels")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_serving.json, or "
+                         "BENCH_serving_smoke.json under --smoke)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

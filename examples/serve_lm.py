@@ -1,4 +1,5 @@
-"""Batched LM serving demo: prefill + KV-cache decode (greedy).
+"""Batched LM serving demo through the continuous-batching ``ServeEngine``
+(greedy prefill + KV-cache decode, one jitted program each).
 
     PYTHONPATH=src python examples/serve_lm.py
 """

@@ -36,7 +36,7 @@ fully-stalled fleet ends the run early instead of spinning.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +91,7 @@ def run_federated_async(
     controller: Optional[FedAdaptController] = None,
     planner: Optional[Planner] = None,
     transport: Optional[Transport] = None,
+    on_aggregate: Optional[Callable[..., None]] = None,
 ) -> Dict[str, np.ndarray]:
     """Train any registered config through the async virtual-clock runtime.
 
@@ -101,6 +102,13 @@ def run_federated_async(
     ``max_staleness`` discards.  ``fl.rounds`` bounds the number of
     aggregations; the run ends early if every in-flight client sits behind
     a dead link.
+
+    ``on_aggregate(version, params, g_flat=...)`` fires after every server
+    aggregation with the new params version; ``g_flat`` is the loop's flat
+    global buffer under the fused server step (``None`` otherwise).  This
+    is the train->serve publication hook: pass
+    ``serving.ParamStore.on_aggregate`` and a live ``ServeEngine`` hot-swaps
+    each aggregated model without recompiling (see serving/hotswap.py).
     """
     program = get_split_program(cfg)
     K = len(clients_data)
@@ -239,6 +247,8 @@ def run_federated_async(
         else:
             mean_stale = 0.0
         version += 1
+        if on_aggregate is not None:
+            on_aggregate(version, params, g_flat=g_flat if fused else None)
         plan.feedback(times)
         # --- history row (one per aggregation) ---------------------------
         hist["accuracy"].append(float(eval_fn(params, test_batch)))

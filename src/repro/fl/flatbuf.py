@@ -84,6 +84,10 @@ class FlatLayout:
         # narrower dtypes need a resync after every unflatten (fl/loop.py)
         self.exact_fp32 = all(d == jnp.float32 for d in self.dtypes)
         self._meta: Dict[float, np.ndarray] = {}
+        # x * 1.0 (not x + 0.0, which flips -0.0) forces a fresh buffer:
+        # a jitted identity would alias its input, and the caller (e.g. the
+        # async loop publishing to a ParamStore) keeps using the source
+        self._copy = jax.jit(lambda buf: buf * jnp.float32(1.0))
         self._flatten = jax.jit(self._flatten_impl)
         self._flatten_stacked = jax.jit(self._flatten_stacked_impl)
         self._unflatten = jax.jit(self._unflatten_impl)
@@ -131,6 +135,13 @@ class FlatLayout:
     def unflatten(self, buf: jnp.ndarray) -> Params:
         """Exact inverse of ``flatten`` (padding dropped, dtypes restored)."""
         return self._unflatten(buf)
+
+    def copy(self, buf: jnp.ndarray) -> jnp.ndarray:
+        """Bitwise copy into a fresh buffer (one jitted dispatch) — the
+        publish primitive of ``serving.hotswap.ParamStore``: the returned
+        buffer shares no storage with ``buf``, so the producer may donate
+        or overwrite its own copy immediately."""
+        return self._copy(buf)
 
     def rows_to_deltas(self, rows, g_flat: jnp.ndarray) -> jnp.ndarray:
         """Client parameter rows -> stacked fp32 deltas ``(R, padded)`` vs

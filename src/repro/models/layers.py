@@ -183,12 +183,18 @@ def attention_block(
     window: int,
     kv_cache: Optional[Params] = None,  # {"k","v": (B, W, KV, D)} rolling buffers
     cache_len: int = 0,                 # W (static); 0 => training (no cache)
-    decode_pos: Optional[jnp.ndarray] = None,  # scalar int32 during decode
+    decode_pos: Optional[jnp.ndarray] = None,  # int32 during decode: scalar
+                                               # (whole batch at one position)
+                                               # or (B,) per-row positions
+                                               # (continuous batching)
 ) -> Tuple[jnp.ndarray, Optional[Params]]:
     """Self-attention with optional rolling-buffer KV cache.
 
     Training / prefill: kv_cache=None, full-sequence causal(+window) attention.
     Decode: x is (B, 1, d); cache slots are written at ``decode_pos % W``.
+    A vector ``decode_pos`` gives every batch row its own position — the
+    serving engine's slot pool, where concurrent requests sit at different
+    sequence depths (``positions`` is then (B, S) instead of (S,)).
     """
     B, S, d = x.shape
     q = (x @ p["wq"]).reshape(B, S, cfg.num_heads, cfg.head_dim)
@@ -197,13 +203,30 @@ def attention_block(
     if cfg.qk_norm:
         q = rms_norm(q, p["q_norm"])
         k = rms_norm(k, p["k_norm"])
-    q = apply_rope(q, positions[None, :], cfg.rope_theta)
-    k = apply_rope(k, positions[None, :], cfg.rope_theta)
+    pos_b = positions if positions.ndim == 2 else positions[None, :]
+    q = apply_rope(q, pos_b, cfg.rope_theta)
+    k = apply_rope(k, pos_b, cfg.rope_theta)
 
     if kv_cache is None:
         mask = attention_scores_mask(positions, positions, causal=True, window=window)
         out = multi_head_attention(q, k, v, mask, cfg.attn_softcap)
         new_cache = None
+    elif decode_pos is not None and jnp.ndim(decode_pos) == 1:
+        # per-row decode positions: each row writes its own slot and masks
+        # against its own position (mask is (B, 1, W))
+        W = cache_len
+        slot = decode_pos % W                                    # (B,)
+        ck = kv_cache["k"].at[jnp.arange(B), slot].set(k[:, 0])
+        cv = kv_cache["v"].at[jnp.arange(B), slot].set(v[:, 0])
+        idx = jnp.arange(W)
+        dp = decode_pos[:, None]                                 # (B, 1)
+        k_pos = dp - ((dp - idx) % W)                            # (B, W)
+        mask = (k_pos >= 0) & (k_pos <= dp)
+        window_t = jnp.asarray(window, jnp.int32)
+        mask &= jnp.where(window_t > 0, k_pos > dp - window_t, True)
+        out = multi_head_attention(q, ck, cv, mask[:, None, :],
+                                   cfg.attn_softcap)
+        new_cache = {"k": ck, "v": cv}
     else:
         W = cache_len
         slot = decode_pos % W

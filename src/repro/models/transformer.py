@@ -217,13 +217,16 @@ def init_cache(cfg: ModelConfig, batch: int, seq_len: int, dtype) -> Params:
 
 def decode_step(cfg: ModelConfig, params: Params, cache: Params,
                 token: jnp.ndarray,       # (B, 1) int32
-                pos: jnp.ndarray,         # scalar int32 — current position
+                pos: jnp.ndarray,         # int32 — scalar current position,
+                                          # or (B,) per-row positions
+                                          # (continuous batching slot pool)
                 ) -> Tuple[jnp.ndarray, Params]:
     """One decode step; cache buffers are donated by the launcher."""
     x = params["embed"][token]
     if cfg.post_block_norm:
         x = x * math.sqrt(cfg.d_model)
-    positions = pos[None] if pos.ndim == 0 else pos
+    pos = jnp.asarray(pos)
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]   # (B, 1)
     windows = window_schedule(cfg)
     CL = cache["k"].shape[2]
 

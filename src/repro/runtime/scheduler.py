@@ -1,12 +1,21 @@
-"""Virtual-clock event scheduler for the asynchronous federated runtime.
+"""Virtual-clock event scheduler — the repo's ONE discrete-event substrate.
 
-The async loop (``fl/async_loop.py``) models every client finishing its
-local split-training at its own Eq. 1 + Transport time rather than on a
-synchronous round barrier.  This module provides the discrete-event
-substrate: a monotonic virtual clock plus a priority queue of timestamped
-events, with deterministic FIFO tie-breaking (two events at the same
-virtual time pop in push order), so a run's event order is a pure function
-of the pushed times — no wall-clock, no RNG.
+Two runtimes share it (re-exported as ``repro.runtime.EventQueue``):
+
+* the async federated loop (``fl/async_loop.py``) schedules each client's
+  report at its own Eq. 1 + Transport completion time instead of a
+  synchronous round barrier;
+* the serving loop (``serving/queue.py``) schedules request arrivals and
+  advances the clock by modeled prefill/decode costs, so tail-latency
+  results are a pure function of the traffic seed and the cost model.
+
+The contract: a monotonic virtual clock plus a priority queue of
+timestamped events, with deterministic FIFO tie-breaking (two events at
+the same virtual time pop in push order), so a run's event order is a pure
+function of the pushed times — no wall-clock, no RNG.  ``push`` schedules,
+``pop`` delivers the earliest event and advances the clock to its time,
+``advance`` moves the clock through a modeled service duration between
+events, ``peek_time`` inspects without advancing.
 
 Infinite timestamps are legal: a client behind a dead link
 (``Transport.transfer_time`` returns ``inf`` at zero bandwidth) simply
@@ -19,6 +28,8 @@ from __future__ import annotations
 import heapq
 import math
 from typing import Any, List, Tuple
+
+__all__ = ["EventQueue"]
 
 
 class EventQueue:
@@ -55,3 +66,14 @@ class EventQueue:
         t, _, payload = heapq.heappop(self._heap)
         self.now = max(self.now, t)
         return t, payload
+
+    def advance(self, dt: float) -> float:
+        """Move the clock forward by a modeled duration ``dt >= 0`` (e.g.
+        one decode step of the serving loop); returns the new ``now``.
+        Events whose time has passed are still delivered by ``pop`` — the
+        clock never rewinds to them."""
+        dt = float(dt)
+        if not math.isfinite(dt) or dt < 0:
+            raise ValueError(f"advance needs a finite dt >= 0, got {dt}")
+        self.now += dt
+        return self.now

@@ -1,0 +1,24 @@
+"""Inference-side subsystem: continuous-batching serving of the global
+model the federated loops train (the "serve" half of train-and-serve).
+
+    engine.py   ServeEngine — fixed slot pool, jitted-once prefill/decode,
+                per-slot positions (continuous batching), hot param swap
+    hotswap.py  ParamStore — versioned flat-buffer snapshots published by
+                fl/async_loop's on_aggregate hook, adopted without
+                recompilation
+    queue.py    Request / TrafficGenerator / ServeCosts / serve — seeded
+                Poisson traffic and the virtual-clock serve loop
+"""
+from repro.serving.engine import (  # noqa: F401
+    FinishedRequest,
+    ServeEngine,
+    reference_decode,
+)
+from repro.serving.hotswap import ParamStore  # noqa: F401
+from repro.serving.queue import (  # noqa: F401
+    Request,
+    ServeCosts,
+    TrafficGenerator,
+    latency_stats,
+    serve,
+)

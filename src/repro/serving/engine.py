@@ -1,0 +1,262 @@
+"""`ServeEngine`: continuous-batching inference over a fixed slot pool.
+
+FedAdapt's server co-executes the offloaded layers of every device's model,
+so the trained global model already lives server-side — this engine is the
+inference half of that train-and-serve system (ROADMAP: "Continuous
+federated serving under heavy traffic").  Design goals, in order:
+
+* **No recompilation across request mixes.**  The engine owns exactly three
+  jitted programs — prefill, claim, decode — each compiled once per engine.
+  Prompt length, generation length, arrival pattern and slot occupancy are
+  all *data*, never shapes: prompts are right-padded to ``max_prompt``
+  (causal masking makes the pad lanes inert, see below), and decode always
+  runs over all ``slots`` rows whether they are active or not (the same
+  pad-and-chunk idiom as the batched fleet engine in fl/fleet.py).
+* **Continuous batching.**  The KV cache is one pooled buffer with a leading
+  slot axis, ``(layers, slots, CL, kv_heads, head_dim)``.  Each slot carries
+  its own decode position (``models.layers.attention_block``'s vector
+  ``decode_pos`` path), so a finished request vacates its slot and a new
+  request claims it mid-decode — no barrier on the other slots.
+* **Hot param swap.**  ``maybe_swap`` replaces ``self.params`` from a
+  ``serving.hotswap.ParamStore`` snapshot via the flat-buffer layout's
+  cached ``unflatten`` — same shapes, same dtypes, so the jit caches are
+  hit, never extended (asserted by ``compile_counts`` in tests).
+
+Why right-padded prefill is exact: causal attention means position ``i``
+never attends to positions ``> i``, so the hidden state (and the KV rows)
+at every true-prompt position is unaffected by the pad lanes.  The pad
+positions do write garbage KV at cache slots ``[true_len, max_prompt)`` —
+but decode overwrites slot ``p`` at position ``p`` *before* the attention
+mask (which only admits slots ``<= p``) can reach it, so garbage KV never
+participates.  The same argument covers slot reuse: a new occupant's
+prefill+decode rewrites every cache slot its mask will ever admit.
+
+Greedy (argmax) sampling; families with a stacked-transformer decode path
+(``dense`` / ``moe``).  ``reference_decode`` is the sequential
+single-request oracle the tests and benchmarks compare against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+
+Params = Any
+
+_SERVABLE_FAMILIES = ("dense", "moe")
+
+
+@dataclasses.dataclass
+class FinishedRequest:
+    """One completed request, as harvested from a slot."""
+    rid: int
+    tokens: List[int]          # all generated tokens (first from prefill)
+
+
+class ServeEngine:
+    """Continuous-batching prefill/decode engine over one model config.
+
+    ``params`` are the initial weights; pass ``store`` (a
+    ``serving.hotswap.ParamStore``) to pick up published training snapshots
+    via ``maybe_swap``.  Shapes are fixed at construction: ``slots``
+    concurrent requests, prompts ``<= max_prompt``, total sequence
+    (prompt + generation) ``<= max_seq``.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Params, *, slots: int = 8,
+                 max_prompt: int = 64, max_seq: int = 128,
+                 params_version: int = 0):
+        if cfg.family not in _SERVABLE_FAMILIES:
+            raise NotImplementedError(
+                f"ServeEngine serves the stacked-transformer families "
+                f"{_SERVABLE_FAMILIES}; {cfg.family!r} needs a per-slot "
+                f"decode adapter (see docs/API.md)")
+        if max_prompt > max_seq:
+            raise ValueError(f"max_prompt={max_prompt} > max_seq={max_seq}")
+        self.cfg = cfg
+        self.slots = int(slots)
+        self.max_prompt = int(max_prompt)
+        self.max_seq = int(max_seq)
+        self.CL = T.cache_len(cfg, max_seq)
+        if self.CL < max_prompt:
+            raise ValueError(
+                f"rolling cache ({self.CL}) shorter than max_prompt "
+                f"({max_prompt}): prefill would evict prompt KV")
+        self.params = params
+        self.params_version = int(params_version)
+        dtype = jnp.asarray(jax.tree_util.tree_leaves(params)[0]).dtype
+        self.cache = T.init_cache(cfg, self.slots, self.max_seq, dtype)
+        # host-side slot table (the only mutable non-array state)
+        S = self.slots
+        self.pos = np.zeros(S, np.int64)           # next decode position
+        self.active = np.zeros(S, bool)
+        self._next_tok = np.zeros(S, np.int32)     # last sampled token
+        self._remaining = np.zeros(S, np.int64)    # decode steps left
+        self._rid = [-1] * S
+        self._out: List[List[int]] = [[] for _ in range(S)]
+        self.last_logits: Optional[np.ndarray] = None   # (S, V) fp32
+        self._build_programs()
+
+    # ------------------------------------------------------------------
+    # the three jitted programs (compiled once each)
+    # ------------------------------------------------------------------
+    def _build_programs(self) -> None:
+        cfg, CL = self.cfg, self.CL
+
+        def prefill_impl(params, tokens, true_len):
+            # right-padded prompt; logits taken at the true last position
+            hidden, cache = T.forward(cfg, params, tokens, None,
+                                      return_cache=True, cache_seq=self.max_seq)
+            last = hidden[0, true_len - 1]
+            logits = (last @ T.unembed_matrix(cfg, params)).astype(jnp.float32)
+            if cfg.logit_softcap > 0:
+                logits = L.softcap(logits, cfg.logit_softcap)
+            return jnp.argmax(logits).astype(jnp.int32), logits, cache
+
+        def claim_impl(pool, req, slot):
+            return jax.tree_util.tree_map(
+                lambda c, r: c.at[:, slot].set(r[:, 0]), pool, req)
+
+        def decode_impl(params, cache, tokens, pos):
+            logits, cache = T.decode_step(cfg, params, cache, tokens, pos)
+            return (jnp.argmax(logits, -1).astype(jnp.int32), logits, cache)
+
+        self._prefill = jax.jit(prefill_impl)
+        self._claim = jax.jit(claim_impl, donate_argnums=(0,))
+        self._decode = jax.jit(decode_impl, donate_argnums=(1,))
+        _ = CL  # cache length is baked into self.cache's shape
+
+    def compile_counts(self) -> Dict[str, int]:
+        """Executable-cache sizes of the engine's jitted programs — each must
+        stay at 1 across any request mix and any number of hot swaps (the
+        zero-recompilation contract, drilled in tests/test_serving.py)."""
+        return {"prefill": self._prefill._cache_size(),
+                "claim": self._claim._cache_size(),
+                "decode": self._decode._cache_size()}
+
+    # ------------------------------------------------------------------
+    # slot pool
+    # ------------------------------------------------------------------
+    @property
+    def num_active(self) -> int:
+        return int(self.active.sum())
+
+    @property
+    def free_slots(self) -> int:
+        return self.slots - self.num_active
+
+    def submit(self, rid: int, prompt: np.ndarray, gen: int
+               ) -> Optional[FinishedRequest]:
+        """Prefill one request and claim a free slot for it.  Returns the
+        completed request immediately when ``gen == 1`` (the prefill already
+        produced its only token); otherwise the request decodes in its slot
+        until ``gen`` tokens exist.  Raises if no slot is free — callers
+        gate on ``free_slots`` (serving/queue.py holds the overflow)."""
+        L = int(len(prompt))
+        if not 1 <= L <= self.max_prompt:
+            raise ValueError(f"prompt length {L} outside [1, "
+                             f"{self.max_prompt}]")
+        if gen < 1 or L + gen > self.max_seq:
+            raise ValueError(f"prompt {L} + gen {gen} exceeds max_seq "
+                             f"{self.max_seq}")
+        free = np.nonzero(~self.active)[0]
+        if not len(free):
+            raise RuntimeError("no free slot; check free_slots before submit")
+        slot = int(free[0])
+        padded = np.zeros(self.max_prompt, np.int32)
+        padded[:L] = np.asarray(prompt, np.int32)
+        tok, _, req_cache = self._prefill(self.params,
+                                          jnp.asarray(padded[None]),
+                                          jnp.int32(L))
+        tok = int(tok)
+        if gen == 1:
+            return FinishedRequest(rid, [tok])
+        self.cache = self._claim(self.cache, req_cache, jnp.int32(slot))
+        self.active[slot] = True
+        self.pos[slot] = L
+        self._next_tok[slot] = tok
+        self._remaining[slot] = gen - 1
+        self._rid[slot] = rid
+        self._out[slot] = [tok]
+        return None
+
+    def step(self) -> List[FinishedRequest]:
+        """One batched decode step over the whole slot pool (inactive slots
+        compute too — fixed shapes — but their outputs are discarded).
+        Returns the requests that finished this step; their slots are free
+        for the next ``submit``."""
+        if not self.active.any():
+            return []
+        toks, logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(self._next_tok[:, None]),
+            jnp.asarray(self.pos.astype(np.int32)))
+        toks = np.asarray(toks)
+        self.last_logits = np.asarray(logits)
+        finished: List[FinishedRequest] = []
+        for s in np.nonzero(self.active)[0]:
+            self._out[s].append(int(toks[s]))
+            self._next_tok[s] = toks[s]
+            self.pos[s] += 1
+            self._remaining[s] -= 1
+            if self._remaining[s] == 0:
+                finished.append(FinishedRequest(self._rid[s], self._out[s]))
+                self.active[s] = False
+                self._rid[s] = -1
+                self._out[s] = []
+        return finished
+
+    # ------------------------------------------------------------------
+    # hot param swap
+    # ------------------------------------------------------------------
+    def maybe_swap(self, store) -> bool:
+        """Adopt the store's latest published params if newer than ours.
+        One cached ``FlatLayout.unflatten`` dispatch — identical shapes and
+        dtypes, so no jit cache grows (``compile_counts`` is the proof).
+        In-flight requests keep their KV cache: generation continues under
+        the new weights mid-sequence, the standard continuous-serving
+        trade-off (documented in docs/ARCHITECTURE.md)."""
+        version, flat, layout = store.snapshot()
+        if flat is None or version == self.params_version:
+            return False
+        self.params = layout.unflatten(flat)
+        self.params_version = version
+        return True
+
+
+# =============================================================================
+# sequential single-request oracle
+# =============================================================================
+_REF_DECODE_CACHE: Dict[str, Any] = {}
+
+
+def reference_decode(cfg: ModelConfig, params: Params, prompt: np.ndarray,
+                     gen: int) -> List[int]:
+    """Greedy decode of ONE request, unpadded and unbatched — the hand-rolled
+    prefill + scalar-position decode loop that ``launch/serve.py`` used to
+    inline.  The continuous-batching engine must match this token-for-token
+    (tests/test_serving.py)."""
+    from repro.models import api
+    L = int(len(prompt))
+    total = L + gen
+    if cfg.name not in _REF_DECODE_CACHE:
+        _REF_DECODE_CACHE[cfg.name] = jax.jit(
+            lambda p, c, t, pos: api.decode(cfg, p, c, t, pos),
+            donate_argnums=(1,))
+    decode = _REF_DECODE_CACHE[cfg.name]
+    tokens = jnp.asarray(np.asarray(prompt, np.int32)[None])
+    logits, cache = api.prefill(cfg, params, {"tokens": tokens},
+                                target_seq=total)
+    token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    out = [int(token[0, 0])]
+    for i in range(gen - 1):
+        logits, cache = decode(params, cache, token, jnp.int32(L + i))
+        token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        out.append(int(token[0, 0]))
+    return out

@@ -1,0 +1,88 @@
+"""`ParamStore`: the train -> serve handoff, torn-read-free by construction.
+
+The async federated loop (``fl/async_loop.run_federated_async``) produces a
+new global model at every buffered aggregation; the serving engine wants to
+adopt each one without recompiling and without ever observing a
+half-written parameter set.  The store solves both with the PR-4 flat
+buffer (``fl.flatbuf.FlatLayout``):
+
+* **One dispatch per publish.**  ``publish(params)`` flattens the pytree
+  into a single contiguous fp32 buffer through the layout's cached jitted
+  ``flatten`` — a fresh device buffer the store owns outright, so training
+  is free to donate its own copy to the next server step.
+  ``publish_flat(g_flat)`` is the fused-loop fast path: the loop already
+  holds the flat global, so the snapshot is one ``FlatLayout.copy``
+  (a donated-buffer identity program) instead of a re-flatten.
+* **Atomic versioned snapshots.**  The (version, buffer) pair swaps under
+  one lock; ``snapshot`` returns both together.  A reader either sees the
+  complete version-``v`` buffer or the complete version-``v+1`` buffer —
+  never a mix — because JAX arrays are immutable once created: the swap
+  replaces the *reference*, not the contents.
+* **No recompilation on the serving side.**  ``ServeEngine.maybe_swap``
+  unflattens the snapshot through the same cached layout executables; the
+  params pytree that comes out has identical treedef/shapes/dtypes, so
+  every engine program hits its existing jit cache.
+
+``on_aggregate`` is the adapter handed to
+``run_federated_async(..., on_aggregate=store.on_aggregate)``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.fl.flatbuf import FlatLayout
+
+Params = Any
+
+
+class ParamStore:
+    """Versioned single-slot store of the latest published global params."""
+
+    def __init__(self, layout: FlatLayout):
+        self.layout = layout
+        self._lock = threading.Lock()
+        self._flat: Optional[jnp.ndarray] = None
+        self._version = 0
+
+    @property
+    def version(self) -> int:
+        return self._version
+
+    def publish(self, params: Params) -> int:
+        """Snapshot a params pytree (one jitted flatten dispatch); returns
+        the new version."""
+        flat = self.layout.flatten(params)
+        return self._install(flat)
+
+    def publish_flat(self, g_flat: jnp.ndarray) -> int:
+        """Snapshot an existing flat global buffer (one donated-copy
+        dispatch — the publisher may immediately donate its own buffer to
+        the next fused server step)."""
+        return self._install(self.layout.copy(g_flat))
+
+    def _install(self, flat: jnp.ndarray) -> int:
+        with self._lock:
+            self._flat = flat
+            self._version += 1
+            return self._version
+
+    def snapshot(self) -> Tuple[int, Optional[jnp.ndarray], FlatLayout]:
+        """Atomic (version, flat buffer, layout).  The buffer is immutable;
+        the engine unflattens it through the layout's cached executables."""
+        with self._lock:
+            return self._version, self._flat, self.layout
+
+    # ------------------------------------------------------------------
+    # fl/async_loop.py hook
+    # ------------------------------------------------------------------
+    def on_aggregate(self, version: int, params: Params,
+                     g_flat: Optional[jnp.ndarray] = None) -> None:
+        """``run_federated_async`` callback: publish each aggregation.
+        Prefers the loop's flat global (copy) over a re-flatten."""
+        if g_flat is not None:
+            self.publish_flat(g_flat)
+        else:
+            self.publish(params)

