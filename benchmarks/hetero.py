@@ -1,0 +1,168 @@
+"""Heterogeneity benchmarks: Dirichlet non-IID skew, HeteroFL width
+scaling, and time-to-target under scripted churn.
+
+Three sweeps, one machine-readable artifact (``BENCH_hetero.json``,
+``_smoke`` suffix under ``--smoke``):
+
+* ``alpha_sweep`` — accuracy vs Dirichlet concentration: the same fleet
+  trained on ``dirichlet_partition`` shards at several alphas plus the IID
+  control, quantifying how label skew degrades federated accuracy;
+* ``width_sweep`` — accuracy and parameter coverage for homogeneous
+  full-width vs mixed-width (HeteroFL coverage-count aggregation) vs
+  all-narrow fleets, on the same data;
+* ``churn_time_to_target`` — the async runtime's virtual time and
+  aggregation count to reach a target accuracy, clean vs under the
+  ``combined`` chaos script (flapping links + leave waves + straggler
+  storms), measuring what churn actually costs end-to-end.
+
+    PYTHONPATH=src python -m benchmarks.hetero           # full sweep
+    PYTHONPATH=src python -m benchmarks.hetero --smoke   # CI subset
+
+Everything is seeded: every cell is a pure function of this file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.vgg import VGG5
+from repro.data.loader import dirichlet_partition
+from repro.data.synthetic import make_cifar_like, split_clients
+from repro.fl.loop import FLConfig, run_federated
+from repro.runtime.chaos import ChaosScript, run_chaos_drill
+
+K = 4
+
+
+def _fl(rounds: int, **kw) -> FLConfig:
+    base = dict(rounds=rounds, local_iters=2, batch_size=10, mode="sfl",
+                static_op=2, augment=False, seed=0)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+def _acc(history) -> float:
+    return float(history["accuracy"][-1])
+
+
+def alpha_sweep(data, test, rounds: int, alphas) -> list:
+    rows = []
+    iid = split_clients(data, K)
+    rows.append({"alpha": "iid", "final_acc":
+                 round(_acc(run_federated(VGG5, iid, test, _fl(rounds))), 4)})
+    for alpha in alphas:
+        shards = dirichlet_partition(data, K, alpha=alpha, seed=0)
+        acc = _acc(run_federated(VGG5, shards, test, _fl(rounds)))
+        skew = [np.bincount(s["labels"], minlength=10) for s in shards]
+        ent = float(np.mean([
+            -(p[p > 0] / p.sum() * np.log(p[p > 0] / p.sum())).sum()
+            for p in skew]))
+        rows.append({"alpha": alpha, "final_acc": round(acc, 4),
+                     "mean_label_entropy": round(ent, 3)})
+        print(f"alpha={alpha:<6} acc={acc:.3f} entropy={ent:.2f}",
+              flush=True)
+    return rows
+
+
+def width_sweep(data, test, rounds: int) -> list:
+    import jax
+    from repro.fl.hetero import HeteroSpec
+    from repro.models.split_program import get_split_program
+    prog = get_split_program(VGG5)
+    p0 = prog.init(jax.random.PRNGKey(0))
+    clients = split_clients(data, K)
+    rows = []
+    for name, widths in [("full", None),
+                         ("mixed", (0.25, 0.5, 1.0, 1.0)),
+                         ("narrow", (0.25, 0.25, 0.5, 0.5))]:
+        h = run_federated(VGG5, clients, test,
+                          _fl(rounds, client_widths=widths))
+        row = {"fleet": name, "widths": widths,
+               "final_acc": round(_acc(h), 4)}
+        if widths is not None:
+            spec = HeteroSpec(prog, p0, widths)
+            cover = np.asarray(spec.rows(range(K)).sum(axis=0)) > 0
+            row["param_coverage"] = round(float(cover.mean()), 4)
+            row["mean_compute_scale"] = round(
+                float(np.mean(spec.compute_scale)), 4)
+        rows.append(row)
+        print(f"widths={name:<7} acc={row['final_acc']:.3f}", flush=True)
+    return rows
+
+
+def churn_time_to_target(data, test, rounds: int) -> Dict:
+    clients = split_clients(data, K)
+    fl = _fl(rounds, local_iters=1, buffer_size=2, staleness_discount=0.5)
+    clean_script = ChaosScript(np.ones((rounds, K), bool),
+                               np.ones((rounds, K)), name="clean")
+    clean = run_chaos_drill(VGG5, clients, test, fl, clean_script)
+    assert clean.ok(), clean.violations
+    churn = run_chaos_drill(VGG5, clients, test, fl,
+                            ChaosScript.combined(K, rounds, seed=3))
+    assert churn.ok(), churn.violations
+    target = 0.9 * max(clean.history["accuracy"])
+
+    def reach(hist) -> Optional[Dict]:
+        hit = np.flatnonzero(np.asarray(hist["accuracy"]) >= target)
+        if not len(hit):
+            return None
+        i = int(hit[0])
+        return {"aggregations": i + 1,
+                "virtual_time": round(float(hist["virtual_time"][i]), 3)}
+
+    out = {"target_acc": round(float(target), 4),
+           "clean": reach(clean.history),
+           "churn": reach(churn.history),
+           "clean_final_acc": round(_acc(clean.history), 4),
+           "churn_final_acc": round(_acc(churn.history), 4)}
+    print(f"time-to-target {out['target_acc']:.3f}: clean={out['clean']} "
+          f"churn={out['churn']}", flush=True)
+    return out
+
+
+def run(smoke: bool = False, out_path: str = None) -> Dict:
+    import jax
+    if out_path is None:
+        out_path = ("BENCH_hetero_smoke.json" if smoke
+                    else "BENCH_hetero.json")
+    n = 240 if smoke else 600
+    rounds = 3 if smoke else 8
+    alphas = (0.1, 100.0) if smoke else (0.1, 0.5, 1.0, 10.0, 100.0)
+    data = make_cifar_like(n, seed=0)
+    test = make_cifar_like(max(60, n // 5), seed=9)
+    payload = {
+        "backend": jax.default_backend(), "smoke": smoke,
+        "num_clients": K, "rounds": rounds,
+        "alpha_sweep": alpha_sweep(data, test, rounds, alphas),
+        "width_sweep": width_sweep(data, test, rounds),
+        "churn_time_to_target": churn_time_to_target(
+            data, test, max(rounds, 4 if smoke else 12)),
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def bench_hetero():
+    """benchmarks/run.py hook: smoke subset, CSV-derived summary."""
+    payload = run(smoke=True)
+    accs = {r["alpha"]: r["final_acc"] for r in payload["alpha_sweep"]}
+    widths = {r["fleet"]: r["final_acc"] for r in payload["width_sweep"]}
+    ttt = payload["churn_time_to_target"]
+    return 0.0, (f"alpha accs {accs}; width accs {widths}; "
+                 f"time-to-target clean={ttt['clean']} churn={ttt['churn']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: fewer alphas/rounds/samples")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_hetero.json, or "
+                         "BENCH_hetero_smoke.json under --smoke)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

@@ -16,6 +16,7 @@ import traceback
 
 from benchmarks import paper_validation as pv
 from benchmarks.async_vs_sync import bench_async_vs_sync
+from benchmarks.hetero import bench_hetero
 from benchmarks.server_step import bench_server_step
 from benchmarks.serving import bench_serving
 
@@ -91,7 +92,9 @@ BENCHES = {
     "quant_transport": pv.bench_quant_transport,
     "overhead": pv.bench_overhead,
     # beyond-paper scenarios
+    "noniid": pv.bench_noniid,
     "async_vs_sync": bench_async_vs_sync,
+    "hetero": bench_hetero,
     "server_step": bench_server_step,
     "serving": bench_serving,
     # system benches

@@ -23,15 +23,29 @@ drill in tests/test_async.py).  The buffered aggregation itself runs
 through the same fused flat-buffer server step as the synchronous loop
 (``fl/flatbuf.py``, one compiled dispatch per aggregation; reports carry
 flat delta rows) — ``FLConfig.server_step="reference"`` selects the
-per-leaf baseline.
+per-leaf baseline.  ``FLConfig.client_widths`` (fl/hetero.py) assigns
+HeteroFL width-scaled subnetworks: weak clients train a width slice, the
+server aggregates across widths with per-coordinate coverage counts, and a
+width-``w`` client's modeled compute shrinks by ``w**2``.
 
 The model updates are *real* JAX training through the same fleet engines
 as the synchronous loop (``FLConfig.engine``): all clients re-dispatched
 at one virtual instant train in one ``engine.run_round`` call, so clients
-sharing an OP fuse into a single vmap'd dispatch under the batched engine.
-Virtual time is tracked by ``runtime.scheduler.EventQueue``; clients on
-dead links (``Transport`` returns ``inf``) simply never report, and a
-fully-stalled fleet ends the run early instead of spinning.
+sharing an (OP, width) fuse into a single vmap'd dispatch under the
+batched engine.  Virtual time is tracked by ``runtime.scheduler.
+EventQueue``; clients on dead links (``Transport`` returns ``inf``) simply
+never report, and a fully-stalled fleet ends the run early instead of
+spinning.
+
+Checkpoint/resume: ``FLConfig.checkpoint_dir`` + ``checkpoint_every``
+snapshot the run at aggregation boundaries.  The key invariant is that at
+a boundary (buffer flushed, reporters re-dispatched) every client has
+exactly ONE in-flight report event, so the whole scheduler state is a
+fixed-shape table: K timestamps (``inf`` for dead links) plus K report
+payloads as flat delta rows.  A resumed run replays the remaining
+aggregations bitwise (``resume=True``; the drill in tests/test_chaos.py) —
+this is what makes mid-drill chaos replay exact.  Requires an fp32 layout
+(``FlatLayout.exact_fp32``) so delta rows round-trip bitwise.
 """
 from __future__ import annotations
 
@@ -42,15 +56,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.checkpoint import CheckpointManager
 from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
 from repro.data.loader import FleetLoader
 from repro.fl.comm import Transport
 from repro.fl.flatbuf import get_server_step, reference_server_step
 from repro.fl.fleet import get_engine, rows_as_list
+from repro.fl.hetero import resolve_hetero
 from repro.fl.loop import (
     FLConfig,
     RoundClock,
+    _ckpt_tree,
     _delta_trees,
     _resolve_planner,
     _zero_errors,
@@ -82,6 +99,31 @@ class _Report:
     comm: float
 
 
+def _async_ckpt_template(params, delta_errors, track_errors: bool, ctl,
+                         K: int, layout):
+    """Fixed-shape async checkpoint: the sync tree (params + aux state)
+    plus the scheduler table — K in-flight report events (timestamps may be
+    ``inf``) with their deltas as flat layout rows — the virtual clock, the
+    planner inputs and the loader cursors."""
+    tree = _ckpt_tree(params, delta_errors, track_errors, ctl, K,
+                      template=True)
+    tree["async"] = {
+        "clock": np.zeros(2, np.float64),          # [now, last_agg_clock]
+        "times": np.zeros(K, np.float64),
+        "comm": np.zeros(K, np.float64),
+        "ops": np.zeros(K, np.int32),
+        "loader_state": np.zeros((K, 2), np.int64),
+        "ev_t": np.zeros(K, np.float64),
+        "ev_client": np.zeros(K, np.int32),
+        "ev_version": np.zeros(K, np.int32),
+        "ev_op": np.zeros(K, np.int32),
+        "ev_dur": np.zeros(K, np.float64),
+        "ev_comm": np.zeros(K, np.float64),
+        "ev_delta": np.zeros((K, layout.padded), np.float32),
+    }
+    return tree
+
+
 def run_federated_async(
     cfg,
     clients_data: List[Dict[str, np.ndarray]],
@@ -92,16 +134,19 @@ def run_federated_async(
     planner: Optional[Planner] = None,
     transport: Optional[Transport] = None,
     on_aggregate: Optional[Callable[..., None]] = None,
+    resume: bool = False,
 ) -> Dict[str, np.ndarray]:
     """Train any registered config through the async virtual-clock runtime.
 
     Same contract as ``fl.loop.run_federated`` (one history row per server
     aggregation instead of per synchronous round) plus async columns:
     ``virtual_time`` (the clock at each aggregation), ``staleness`` (mean
-    staleness of the applied updates) and ``dropped`` counting
-    ``max_staleness`` discards.  ``fl.rounds`` bounds the number of
-    aggregations; the run ends early if every in-flight client sits behind
-    a dead link.
+    staleness of the applied updates), ``dropped`` counting
+    ``max_staleness`` discards, and ``agg_weight_sum`` (the applied
+    normalized weight mass — 1.0 whenever any update applied, 0.0 when the
+    whole buffer was discarded; the conservation invariant chaos drills
+    assert).  ``fl.rounds`` bounds the number of aggregations; the run ends
+    early if every in-flight client sits behind a dead link.
 
     ``on_aggregate(version, params, g_flat=...)`` fires after every server
     aggregation with the new params version; ``g_flat`` is the loop's flat
@@ -109,6 +154,12 @@ def run_federated_async(
     is the train->serve publication hook: pass
     ``serving.ParamStore.on_aggregate`` and a live ``ServeEngine`` hot-swaps
     each aggregated model without recompiling (see serving/hotswap.py).
+
+    With ``fl.checkpoint_dir`` set, the run snapshots every
+    ``fl.checkpoint_every`` aggregations; ``resume=True`` restores the
+    latest snapshot and returns the *suffix* history (rows for the
+    remaining aggregations), bitwise identical to the uninterrupted run's
+    suffix.
     """
     program = get_split_program(cfg)
     K = len(clients_data)
@@ -120,8 +171,6 @@ def run_federated_async(
             "the async runtime replaces deadline drops and failure masks "
             "(a slow client is simply aggregated late); run the sync loop "
             "for deadline_factor/fail_prob scenarios")
-    if fl.checkpoint_dir:
-        raise ValueError("async checkpoint/resume is not supported yet")
 
     params = program.init(jax.random.PRNGKey(fl.seed))
     if fl.server_step not in ("fused", "reference"):
@@ -129,6 +178,11 @@ def run_federated_async(
                          f"known: fused, reference")
     fused = fl.server_step == "fused"
     layout = program.flat_layout(params)
+    if fl.checkpoint_dir and not layout.exact_fp32:
+        raise ValueError(
+            "async checkpoint/resume needs an fp32 parameter layout "
+            "(in-flight deltas are checkpointed as flat rows, which is "
+            "only bitwise for fp32)")
     loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
                                       seed=fl.seed)
     engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
@@ -139,37 +193,89 @@ def run_federated_async(
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
     track_errors = fl.delta_density < 1.0
     delta_errors = _zero_errors(K, layout) if track_errors else None
+    hetero = resolve_hetero(fl, program, params, layout)
+    if hetero is not None and len(hetero) != K:
+        raise ValueError(f"client_widths has {len(hetero)} entries for "
+                         f"K={K} clients")
+    ctl = controller if controller is not None \
+        else getattr(planner, "controller", None)
     # the SAME cached compiled server step as the synchronous loop
     # (fl/flatbuf.py) — sync and async aggregate through one executable
     srv = get_server_step(layout, fl.delta_density, fl.quantize_deltas) \
         if fused else None
     g_flat = layout.flatten(params) if fused else None
     clock = RoundClock(program, fl, K, seq, params, sim=sim,
-                       transport=transport)
+                       transport=transport,
+                       compute_scale=(hetero.compute_scale
+                                      if hetero is not None else None))
 
-    # round-0 baselines (classic FL, no offloading) — same normalizer as the
-    # synchronous loop, so planners behave identically in both runtimes
-    times, _ = clock.times([native_op] * K, 0)
-    if controller is not None and controller.baselines is None:
-        controller.begin(times)
-    plan = _resolve_planner(fl, native_op, planner, controller, sim)
-    plan.begin(times)
-
+    mgr = CheckpointManager(fl.checkpoint_dir) if fl.checkpoint_dir else None
+    version = 0            # server params version == aggregations so far
+    queue = EventQueue()
     comm = np.zeros(K)
     current_ops = [native_op] * K
+    last_agg_clock = 0.0
+    restored_state = None
+    if mgr is not None and resume:
+        restored_state, step = mgr.restore_latest(
+            _async_ckpt_template(params, delta_errors, track_errors, ctl, K,
+                                 layout))
+
+    if restored_state is not None:
+        version = int(step)
+        params = restored_state["params"]
+        if fused:
+            g_flat = layout.flatten(params)
+        if track_errors:
+            delta_errors = jnp.asarray(restored_state["delta_errors"],
+                                       jnp.float32)
+        if ctl is not None:
+            ctl.baselines = np.asarray(
+                restored_state["controller"]["baselines"], np.float64)
+            ctl.prev_actions = np.asarray(
+                restored_state["controller"]["prev_actions"], np.float32)
+        st = restored_state["async"]
+        queue = EventQueue(start_time=float(st["clock"][0]))
+        last_agg_clock = float(st["clock"][1])
+        times = np.asarray(st["times"], np.float64)
+        comm = np.asarray(st["comm"], np.float64)
+        current_ops = [int(o) for o in st["ops"]]
+        loaders.restore([(int(e), int(c)) for e, c in st["loader_state"]])
+        # re-inflate the K in-flight report events in saved (t, seq) order:
+        # pushes re-assign fresh FIFO sequence numbers, so same-time ties
+        # pop in the same order as the uninterrupted run
+        for i in range(K):
+            row = jnp.asarray(st["ev_delta"][i], jnp.float32)
+            rpt = _Report(int(st["ev_client"][i]),
+                          int(st["ev_version"][i]),
+                          int(st["ev_op"][i]),
+                          row if fused else layout.unflatten(row),
+                          float(st["ev_dur"][i]),
+                          float(st["ev_comm"][i]))
+            queue.push(float(st["ev_t"][i]), rpt)
+        plan = _resolve_planner(fl, native_op, planner, controller, sim)
+        plan.begin(times)   # FedAdaptPlanner skips: baselines are restored
+    else:
+        # round-0 baselines (classic FL, no offloading) — same normalizer
+        # as the synchronous loop, so planners behave identically in both
+        # runtimes
+        times, _ = clock.times([native_op] * K, 0)
+        if controller is not None and controller.baselines is None:
+            controller.begin(times)
+        plan = _resolve_planner(fl, native_op, planner, controller, sim)
+        plan.begin(times)
+
     hist: Dict[str, list] = {"accuracy": [], "round_time": [], "ops": [],
                              "times": [], "comm_time": [], "dropped": [],
-                             "virtual_time": [], "staleness": []}
+                             "virtual_time": [], "staleness": [],
+                             "agg_weight_sum": []}
     eval_fn = jax.jit(lambda p, b: program.eval_metric(p, b))
     test_batch = {k: jnp.asarray(v) for k, v in test_data.items()}
 
-    queue = EventQueue()
-    version = 0            # server params version == aggregations so far
-
     def dispatch(ks: List[int]) -> None:
         """Plan fresh OPs, run the clients' local training (one fleet-engine
-        call: same-OP clients fuse into one vmap'd dispatch), and schedule
-        their reports at ``now + modeled duration``."""
+        call: same-(OP, width) clients fuse into one vmap'd dispatch), and
+        schedule their reports at ``now + modeled duration``."""
         lr = fl.lr * (fl.lr_drop_factor if version >= fl.lr_drop_round
                       else 1.0)
         bandwidths = sim.bandwidths(version) if sim is not None else None
@@ -177,7 +283,7 @@ def run_federated_async(
         for k in ks:
             current_ops[k] = int(ops[k])
         idxs, rows = engine.run_round(params, loaders, ops, list(ks),
-                                      version, lr)
+                                      version, lr, hetero=hetero)
         t_all, c_all = clock.times(ops, version)
         if fused:
             # one dispatch for the whole cohort: flatten rows, subtract the
@@ -192,11 +298,37 @@ def run_federated_async(
                           float(t_all[k]), float(c_all[k]))
             queue.push(queue.now + rpt.time, rpt)
 
-    dispatch(list(range(K)))
-    buffer: List[_Report] = []
-    last_agg_clock = 0.0
+    def save_checkpoint() -> None:
+        """Snapshot at an aggregation boundary: buffer empty, every client
+        has exactly one in-flight event (the fixed-shape invariant)."""
+        heap = sorted(queue._heap)          # (t, seq, rpt): pop order
+        assert len(heap) == K, "checkpoint off an aggregation boundary"
+        tree = _ckpt_tree(params, delta_errors, track_errors, ctl, K)
+        tree["async"] = {
+            "clock": np.asarray([queue.now, last_agg_clock], np.float64),
+            "times": np.asarray(times, np.float64),
+            "comm": np.asarray(comm, np.float64),
+            "ops": np.asarray(current_ops, np.int32),
+            "loader_state": np.asarray(loaders.state(), np.int64),
+            "ev_t": np.asarray([t for t, _, _ in heap], np.float64),
+            "ev_client": np.asarray([r.client for _, _, r in heap],
+                                    np.int32),
+            "ev_version": np.asarray([r.version for _, _, r in heap],
+                                     np.int32),
+            "ev_op": np.asarray([r.op for _, _, r in heap], np.int32),
+            "ev_dur": np.asarray([r.time for _, _, r in heap], np.float64),
+            "ev_comm": np.asarray([r.comm for _, _, r in heap], np.float64),
+            "ev_delta": jnp.stack(
+                [r.delta if fused else layout.flatten(r.delta)
+                 for _, _, r in heap]),
+        }
+        mgr.save(tree, version)
 
-    while len(hist["accuracy"]) < fl.rounds:
+    if restored_state is None:
+        dispatch(list(range(K)))
+    buffer: List[_Report] = []
+
+    while version < fl.rounds:
         if len(buffer) < buffer_size and np.isfinite(queue.peek_time()):
             _, rpt = queue.pop()
             times[rpt.client] = rpt.time
@@ -228,9 +360,12 @@ def run_federated_async(
             ids = jnp.asarray(
                 np.asarray([e.client for e in fresh], np.int32))
             err_rows = delta_errors[ids] if track_errors else None
+            mask_rows = (hetero.rows([e.client for e in fresh])
+                         if hetero is not None else None)
             if fused:
                 stacked = jnp.stack([e.delta for e in fresh])
-                g_flat, new_err = srv(g_flat, stacked, w_list, err_rows)
+                g_flat, new_err = srv(g_flat, stacked, w_list, err_rows,
+                                      masks=mask_rows)
                 params = layout.unflatten(g_flat)
                 if not layout.exact_fp32:
                     # keep the flat master equal to the rounded params
@@ -240,12 +375,14 @@ def run_federated_async(
                 params, new_err = reference_server_step(
                     layout, params, [e.delta for e in fresh], w_list,
                     err_rows, density=fl.delta_density,
-                    quantize=fl.quantize_deltas)
+                    quantize=fl.quantize_deltas, masks=mask_rows)
             if track_errors:
                 delta_errors = delta_errors.at[ids].set(new_err)
             mean_stale = float(s.mean())
+            weight_sum = float(np.sum(w_list))
         else:
             mean_stale = 0.0
+            weight_sum = 0.0
         version += 1
         if on_aggregate is not None:
             on_aggregate(version, params, g_flat=g_flat if fused else None)
@@ -259,12 +396,24 @@ def run_federated_async(
         hist["dropped"].append(len(buffer) - len(fresh))
         hist["virtual_time"].append(queue.now)
         hist["staleness"].append(mean_stale)
+        hist["agg_weight_sum"].append(weight_sum)
         last_agg_clock = queue.now
         # --- re-dispatch the reporting clients at the new version --------
         redispatch = sorted(e.client for e in buffer)
         buffer = []
-        if len(hist["accuracy"]) < fl.rounds:
+        if version < fl.rounds:
             dispatch(redispatch)
+            # --- reconnection: unreachable clients re-register -----------
+            # a client dispatched behind a dead link holds an inf event;
+            # every boundary it re-fetches the CURRENT model, so when its
+            # link recovers (chaos scripts, flapping transports) it reports
+            # fresh work instead of being lost to the fleet forever
+            stuck = sorted({r.client for r in queue.drop_unreachable()})
+            if stuck:
+                dispatch(stuck)
+            if mgr is not None and fl.checkpoint_every and \
+                    version % fl.checkpoint_every == 0:
+                save_checkpoint()
 
     hist_np = {k: np.asarray(v) for k, v in hist.items()}
     hist_np["params"] = params

@@ -211,27 +211,46 @@ class ServerStep:
         self._step = jax.jit(self._step_impl, donate_argnums=donate)
 
     def _step_impl(self, g: jnp.ndarray, deltas: jnp.ndarray,
-                   w: jnp.ndarray, err: Optional[jnp.ndarray]):
+                   w: jnp.ndarray, err: Optional[jnp.ndarray],
+                   masks: Optional[jnp.ndarray] = None):
         block = self.layout.block
         if not self.track_errors and not self.quantize:
-            # plain weighted averaging: ONE (K,) @ (K, n) matvec
-            return g + w @ deltas, None
+            if masks is None:
+                # plain weighted averaging: ONE (K,) @ (K, n) matvec
+                return g + w @ deltas, None
+            # cross-width averaging (HeteroFL): per-coordinate coverage —
+            # each coordinate averages over the clients whose width mask
+            # covers it; uncovered coordinates keep the global bitwise.
+            # Still one dispatch: two matvecs and a guarded divide.
+            num = w @ (masks * deltas)
+            den = w @ masks
+            upd = jnp.where(den > 0, num, 0.0) / jnp.where(den > 0, den, 1.0)
+            return g + upd, None
 
         # compression pipeline: stream client rows through a lax.scan so the
         # peak working set stays O(n) instead of O(K x n) — several (K, n)
         # fp32 intermediates (carried, compressed, sent) would otherwise
         # dwarf the deltas themselves.  Still ONE compiled dispatch; the
         # weighted reduction accumulates in client order (the same order as
-        # the reference loop).
-        def one(acc, xs):
+        # the reference loop).  With ``masks`` the scan also accumulates the
+        # per-coordinate covered weight and the update becomes the guarded
+        # coverage quotient (uncovered coordinates stay bitwise).
+        def one(carry, xs):
+            acc, den = carry
+            if masks is not None:
+                *xs, m = xs
             if self.track_errors:
                 d, e, wi = xs
+                if masks is not None:
+                    d = m * d
                 carried = d + e
                 comp = topk_compress_flat(carried[None], self._meta,
                                           self._kmax, block=block,
                                           interpret=self.interpret)[0]
             else:
                 d, wi = xs
+                if masks is not None:
+                    d = m * d
                 carried, comp = d, d
             if self.quantize:
                 from repro.kernels.quant_transfer.ops import (
@@ -244,20 +263,33 @@ class ServerStep:
                                   interpret=self.interpret).reshape(-1)
             else:
                 sent = comp
+            if masks is not None:
+                sent = m * sent
+                den = den + wi * m
             new_e = carried - sent if self.track_errors else None
-            return acc + wi * sent, new_e
+            return (acc + wi * sent, den), new_e
 
         xs = (deltas, err, w) if self.track_errors else (deltas, w)
-        upd, new_err = jax.lax.scan(one, jnp.zeros_like(g), xs)
+        if masks is not None:
+            xs = xs + (masks,)
+        zero = jnp.zeros_like(g)
+        (upd, den), new_err = jax.lax.scan(one, (zero, zero), xs)
+        if masks is not None:
+            upd = jnp.where(den > 0, upd, 0.0) / jnp.where(den > 0, den, 1.0)
         return g + upd, new_err
 
     def __call__(self, g_flat: jnp.ndarray, deltas: jnp.ndarray,
                  weights: Sequence[float],
-                 errors: Optional[jnp.ndarray] = None
+                 errors: Optional[jnp.ndarray] = None,
+                 masks: Optional[jnp.ndarray] = None
                  ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray]]:
+        """``masks`` (same ``(R, padded)`` stacking as ``deltas``; 0/1 flat
+        width-mask rows from ``fl.hetero.HeteroSpec``) switches on the
+        cross-width coverage-count aggregation.  ``None`` keeps the
+        homogeneous paths bitwise untouched."""
         w = jnp.asarray(_normalized_f64(weights), jnp.float32)
         self.calls += 1
-        return self._step(g_flat, deltas, w, errors)
+        return self._step(g_flat, deltas, w, errors, masks)
 
 
 _STEP_CACHE: Dict[tuple, ServerStep] = {}
@@ -302,15 +334,29 @@ def reference_server_step(
     density: float = 1.0,
     quantize: bool = False,
     interpret: Optional[bool] = None,
+    masks: Optional[jnp.ndarray] = None,
 ) -> Tuple[Params, Optional[jnp.ndarray]]:
     """Per-leaf, per-client baseline with the same algorithm as the fused
     ``ServerStep``: error-feedback carry, per-leaf top-k (density from true
     leaf sizes), optional int8 wire quantization, weighted apply.  ``errors``
     are flat ``(len(deltas), padded)`` rows (the loop's canonical error
-    representation); returns updated ``(params, error_rows)``."""
+    representation); returns updated ``(params, error_rows)``.
+
+    ``masks`` (flat 0/1 ``(len(deltas), padded)`` width-mask rows, same
+    stacking as ``errors``) selects the cross-width oracle: per-coordinate
+    coverage-weighted averaging — every coordinate averages over the clients
+    that cover it, uncovered coordinates keep the global value bitwise.
+    This is the baseline the fused masked ``ServerStep`` is tested against.
+    """
     track = density < 1.0
+    mask_trees = ([layout.unflatten(masks[i]) for i in range(len(deltas))]
+                  if masks is not None else None)
     sents, new_err_rows = [], []
     for i, delta in enumerate(deltas):
+        if mask_trees is not None:
+            delta = jax.tree_util.tree_map(
+                lambda m, d: m.astype(jnp.float32) * d.astype(jnp.float32),
+                mask_trees[i], delta)
         if track:
             err_tree = layout.unflatten(errors[i])
             carried = jax.tree_util.tree_map(
@@ -322,11 +368,34 @@ def reference_server_step(
             carried, comp = None, delta
         sent = (quantize_delta_flat(layout, comp, interpret=interpret)
                 if quantize else comp)
+        if mask_trees is not None:
+            sent = jax.tree_util.tree_map(
+                lambda m, s: m.astype(jnp.float32) * s, mask_trees[i], sent)
         if track:
             new_err = jax.tree_util.tree_map(lambda c, s: c - s, carried,
                                              sent)
             new_err_rows.append(layout.flatten(new_err))
         sents.append(sent)
     from repro.fl.fedavg import fedavg_apply_deltas
-    new_params = fedavg_apply_deltas(params, sents, weights)
+    if mask_trees is None:
+        new_params = fedavg_apply_deltas(params, sents, weights)
+    else:
+        # coverage-count apply: upd = (sum_i w_i m_i d_i) / (sum_i w_i m_i),
+        # coordinate-wise, 0 where no client covers
+        w = _normalized_f64(weights)
+        num = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape,
+                                                         jnp.float32), params)
+        den = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape,
+                                                         jnp.float32), params)
+        for i, sent in enumerate(sents):
+            wi = jnp.float32(w[i])
+            num = jax.tree_util.tree_map(lambda a, s: a + wi * s, num, sent)
+            den = jax.tree_util.tree_map(
+                lambda a, m: a + wi * m.astype(jnp.float32), den,
+                mask_trees[i])
+        new_params = jax.tree_util.tree_map(
+            lambda p, n, d: (p.astype(jnp.float32)
+                             + jnp.where(d > 0, n, 0.0)
+                             / jnp.where(d > 0, d, 1.0)).astype(p.dtype),
+            params, num, den)
     return new_params, (jnp.stack(new_err_rows) if track else None)

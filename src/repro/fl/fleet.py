@@ -74,6 +74,25 @@ def make_local_step(program: SplitProgram, quantize: bool):
     return step
 
 
+def make_local_step_masked(program: SplitProgram, quantize: bool):
+    """Width-masked client iteration (HeteroFL, fl/hetero.py): the update
+    is ``p - lr * (mask * grad)`` — a client that started from
+    ``mask * global`` never leaves its subnetwork, so its delta vs the
+    global is confined to the coordinates it actually trained (after the
+    server re-masks; see ServerStep's coverage-count aggregation)."""
+
+    @partial(jax.jit, static_argnames=("op",))
+    def step(params, mask, batch, lr, op):
+        loss, grads = jax.value_and_grad(
+            lambda p: program.loss_through_cut(p, batch, op,
+                                               quantize=quantize))(params)
+        new = jax.tree_util.tree_map(lambda p, g, m: p - lr * (m * g),
+                                     params, grads, mask)
+        return new, loss
+
+    return step
+
+
 def make_fleet_step(program: SplitProgram, quantize: bool):
     """One OP group, one round: vmap over the client axis of a lax.scan over
     local iterations.  ``batches`` leaves are ``(G, I, B, ...)``; ``params``
@@ -93,6 +112,30 @@ def make_fleet_step(program: SplitProgram, quantize: bool):
     return fleet_step
 
 
+def make_fleet_step_masked(program: SplitProgram, quantize: bool):
+    """Width-masked OP-group round (HeteroFL): every client in the group
+    shares one ``mask`` (the batched engine groups by ``(OP, width)``), so
+    the mask broadcasts like the params — start from ``mask * global``,
+    apply ``mask * grad`` updates, vmap over the client axis."""
+
+    @partial(jax.jit, static_argnames=("op",))
+    def fleet_step(params, mask, batches, lr, op):
+        def one_client(p, client_batches):       # leaves (I, B, ...)
+            def body(p, batch):
+                loss, grads = jax.value_and_grad(
+                    lambda q: program.loss_through_cut(
+                        q, batch, op, quantize=quantize))(p)
+                new = jax.tree_util.tree_map(
+                    lambda q, g, m: q - lr * (m * g), p, grads, mask)
+                return new, loss
+            return jax.lax.scan(body, p, client_batches)
+
+        p0 = jax.tree_util.tree_map(jnp.multiply, mask, params)
+        return jax.vmap(one_client, in_axes=(None, 0))(p0, batches)
+
+    return fleet_step
+
+
 class SequentialEngine:
     """One jit dispatch per (client, iteration) — the pre-fleet loop."""
 
@@ -104,22 +147,31 @@ class SequentialEngine:
         self.seed = seed
         self.augment = augment
         self._step = make_local_step(program, quantize)
+        self._step_masked = make_local_step_masked(program, quantize)
 
     def run_round(self, params: Params, loader: FleetLoader,
                   ops: Sequence[int], alive_idx: Sequence[int],
-                  round_idx: int, lr: float
+                  round_idx: int, lr: float, hetero=None
                   ) -> Tuple[List[int], List[Params]]:
         out: List[Params] = []
         for k in alive_idx:
-            p_k = params
+            if hetero is not None:
+                p_k = hetero.apply(params, k)
+                mask = hetero.mask_tree(k)
+            else:
+                p_k = params
             for it in range(self.local_iters):
                 batch = loader.next_batch(k)
                 if self.augment and "images" in batch:
                     batch["images"] = flip_augment(batch["images"], self.seed,
                                                    round_idx, k, it)
                 jbatch = {key: jnp.asarray(v) for key, v in batch.items()}
-                p_k, _ = self._step(p_k, jbatch, jnp.float32(lr),
-                                    int(ops[k]))
+                if hetero is not None:
+                    p_k, _ = self._step_masked(p_k, mask, jbatch,
+                                               jnp.float32(lr), int(ops[k]))
+                else:
+                    p_k, _ = self._step(p_k, jbatch, jnp.float32(lr),
+                                        int(ops[k]))
             out.append(p_k)
         return list(alive_idx), out
 
@@ -157,12 +209,17 @@ class BatchedEngine:
         self.augment = augment
         self.max_group = max(1, int(max_group))
         self._step = make_fleet_step(program, quantize)
+        self._step_masked = make_fleet_step_masked(program, quantize)
 
-    def _group(self, ops: Sequence[int], alive_idx: Sequence[int]
-               ) -> Dict[int, List[int]]:
-        groups: Dict[int, List[int]] = {}
+    def _group(self, ops: Sequence[int], alive_idx: Sequence[int],
+               hetero=None) -> Dict[tuple, List[int]]:
+        """Fusable groups: clients sharing (OP, width) — both change the
+        traced computation (OP is a static argument, the width mask an
+        operand that must broadcast across the group)."""
+        groups: Dict[tuple, List[int]] = {}
         for k in alive_idx:
-            groups.setdefault(int(ops[k]), []).append(k)
+            width = hetero.width(k) if hetero is not None else 1.0
+            groups.setdefault((int(ops[k]), width), []).append(k)
         return groups
 
     def _stack_round(self, loader: FleetLoader, ks: List[int],
@@ -186,11 +243,11 @@ class BatchedEngine:
 
     def run_round(self, params: Params, loader: FleetLoader,
                   ops: Sequence[int], alive_idx: Sequence[int],
-                  round_idx: int, lr: float
+                  round_idx: int, lr: float, hetero=None
                   ) -> Tuple[List[int], StackedRows]:
         idxs: List[int] = []
         stacked: List[Params] = []
-        for op, all_ks in self._group(ops, alive_idx).items():
+        for (op, _w), all_ks in self._group(ops, alive_idx, hetero).items():
             for i in range(0, len(all_ks), self.max_group):
                 ks = all_ks[i:i + self.max_group]
                 batches = self._stack_round(loader, ks, round_idx)
@@ -204,7 +261,13 @@ class BatchedEngine:
                         np.concatenate([np.arange(len(ks)),
                                         np.zeros(pad, np.int32)]))
                     batches = {key: v[sel] for key, v in batches.items()}
-                finals, _ = self._step(params, batches, jnp.float32(lr), op)
+                if hetero is not None:
+                    finals, _ = self._step_masked(
+                        params, hetero.mask_tree(ks[0]), batches,
+                        jnp.float32(lr), op)
+                else:
+                    finals, _ = self._step(params, batches, jnp.float32(lr),
+                                           op)
                 if pad:
                     finals = jax.tree_util.tree_map(lambda a: a[:len(ks)],
                                                     finals)

@@ -1,0 +1,108 @@
+"""System-heterogeneous clients: HeteroFL-style width-scaled subnetworks.
+
+FedAdapt handles compute heterogeneity by *offloading* — weak devices cut
+earlier and let the server run the tail.  The complementary technique (and
+the dominant one in the on-device-constraint survey arXiv:2307.09182) is
+*width scaling*: a weak client trains only the first ``width`` fraction of
+every hidden dimension, a static HeteroFL-style subnetwork of the global
+model.  Both compose here: a client has an offloading point *and* a width.
+
+``HeteroSpec`` is the per-fleet description.  It precomputes, per distinct
+width, the 0/1 mask tree (``SplitProgram.width_mask``) and its flat row in
+the server-step layout, so the training loops pay one mask build per width
+per run, not per round:
+
+* engines (fl/fleet.py) start each client from ``mask * global`` and apply
+  masked SGD updates, so a client's params never leave its subnetwork;
+* the server (fl/flatbuf.py ``ServerStep(..., masks=...)``) aggregates
+  deltas with per-coordinate coverage counts — each coordinate averages
+  over the clients whose mask covers it; coordinates no client covers stay
+  bitwise unchanged.  Masks are *nested* (a width-0.25 slice is a prefix of
+  the width-0.5 slice), so every coordinate's average is over the clients
+  that actually trained it.
+
+``compute_scale`` feeds the Eq. 1 cost model: a width-``w`` client's
+dominant matmuls shrink ~quadratically (both operand dims scale), so its
+modeled compute is scaled by ``w**2`` — the standard HeteroFL accounting;
+an approximation for the non-scaled axes (per-head params, logits).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Params = Any
+
+
+class HeteroSpec:
+    """Per-client width assignment plus the cached mask machinery.
+
+    ``widths[k]`` in (0, 1] is client ``k``'s width fraction; 1.0 is a full
+    client (its mask is all-ones and, alone, reproduces homogeneous FL).
+    Masks are static: a pure function of ``(param structure, width)``, the
+    same every round — which is what makes checkpoint resume and replay
+    bitwise, and lets the fused server step treat them as ordinary operands.
+    """
+
+    def __init__(self, program, params: Params,
+                 widths: Sequence[float], layout=None):
+        ws = [float(w) for w in widths]
+        for w in ws:
+            if not 0.0 < w <= 1.0:
+                raise ValueError(f"client width {w} outside (0, 1]")
+        self.program = program
+        self.widths: List[float] = ws
+        self.layout = layout if layout is not None \
+            else program.flat_layout(params)
+        # one mask tree + flat row per DISTINCT width (fleets usually have
+        # a few tiers, not K distinct widths)
+        self._mask_trees: Dict[float, Params] = {}
+        self._mask_rows: Dict[float, jnp.ndarray] = {}
+        for w in sorted(set(ws)):
+            tree = program.width_mask(params, w)
+            self._mask_trees[w] = tree
+            # 0/1 masks are exactly representable: flatten is bitwise
+            self._mask_rows[w] = self.layout.flatten(tree)
+        self._apply = jax.jit(
+            lambda p, m: jax.tree_util.tree_map(jnp.multiply, m, p))
+
+    def __len__(self) -> int:
+        return len(self.widths)
+
+    def width(self, k: int) -> float:
+        return self.widths[k]
+
+    def mask_tree(self, k: int) -> Params:
+        """Client ``k``'s 0/1 mask pytree (params structure)."""
+        return self._mask_trees[self.widths[k]]
+
+    def mask_row(self, k: int) -> jnp.ndarray:
+        """Client ``k``'s flat 0/1 mask row ``(layout.padded,)``."""
+        return self._mask_rows[self.widths[k]]
+
+    def rows(self, k_indices: Sequence[int]) -> jnp.ndarray:
+        """Stacked flat mask rows ``(len(k_indices), padded)`` — the
+        ``masks`` operand of the (fused or reference) server step."""
+        return jnp.stack([self.mask_row(int(k)) for k in k_indices])
+
+    def apply(self, params: Params, k: int) -> Params:
+        """``mask_k * params``: client ``k``'s subnetwork start point."""
+        return self._apply(params, self.mask_tree(k))
+
+    @property
+    def compute_scale(self) -> np.ndarray:
+        """Per-client Eq. 1 compute multiplier (``width**2``, see module
+        docstring)."""
+        return np.asarray([w * w for w in self.widths], np.float64)
+
+
+def resolve_hetero(fl, program, params: Params,
+                   layout=None) -> Optional[HeteroSpec]:
+    """Build the fleet's HeteroSpec from ``FLConfig.client_widths`` (or
+    return ``None`` — the homogeneous paths stay bitwise untouched)."""
+    if getattr(fl, "client_widths", None) is None:
+        return None
+    return HeteroSpec(program, params, fl.client_widths, layout=layout)

@@ -47,7 +47,7 @@ exactly at ``buffer_size=K, staleness_discount=0``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -91,6 +91,14 @@ class FLConfig:
     server_step: str = "fused"       # aggregation path: fused (one compiled
                                      # flat-buffer program, fl/flatbuf.py) |
                                      # reference (per-leaf tree_map baseline)
+    client_widths: Optional[Sequence[float]] = None
+                                     # per-client HeteroFL width fractions in
+                                     # (0, 1] (fl/hetero.py): weak clients
+                                     # train a width-slice subnetwork and the
+                                     # server aggregates across widths with
+                                     # per-coordinate coverage counts; None
+                                     # keeps every client full-width (the
+                                     # homogeneous paths stay bitwise)
     # --- async runtime knobs (fl/async_loop.run_federated_async) ----------
     buffer_size: int = 0             # aggregate once this many client
                                      # updates arrive; 0 -> K (and with
@@ -173,7 +181,8 @@ class RoundClock:
 
     def __init__(self, program, fl: FLConfig, K: int, seq: Optional[int],
                  params, sim: Optional[SimulatedCluster] = None,
-                 transport: Optional[Transport] = None):
+                 transport: Optional[Transport] = None,
+                 compute_scale: Optional[np.ndarray] = None):
         self.program = program
         self.fl = fl
         self.K = K
@@ -182,6 +191,10 @@ class RoundClock:
         self.transport = transport
         self.native_op = program.native_op
         self.model_bytes = float(model_bytes(params))  # sizes are static
+        # per-client compute multiplier (HeteroFL width**2, fl/hetero.py);
+        # None leaves every path's arithmetic untouched
+        self.compute_scale = (np.asarray(compute_scale, np.float64)
+                              if compute_scale is not None else None)
 
     def comm_times(self, ops: List[int], round_idx: int) -> np.ndarray:
         """Per-device comm time through the Transport: per-iteration cut
@@ -212,13 +225,24 @@ class RoundClock:
 
     def times(self, ops: List[int], round_idx: int):
         """(total per-device round times, comm component)."""
+        scale = self.compute_scale
         if self.transport is not None:
             comm = self.comm_times(ops, round_idx)
             comp = (self.sim.round_compute_times(ops, round_idx)
                     if self.sim is not None else np.zeros(self.K))
+            if scale is not None:
+                comp = comp * scale
             return comp + comm, comm
         if self.sim is not None:
+            if scale is not None:
+                # Eq. 1's built-in network term is width-independent: scale
+                # only the compute component
+                comp = self.sim.round_compute_times(ops, round_idx)
+                total = self.sim.round_times(ops, round_idx)
+                return comp * scale + (total - comp), np.zeros(self.K)
             return self.sim.round_times(ops, round_idx), np.zeros(self.K)
+        if scale is not None:
+            return np.ones(self.K) * scale, np.zeros(self.K)
         return np.ones(self.K), np.zeros(self.K)
 
 
@@ -259,6 +283,11 @@ def run_federated(
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
     track_errors = fl.delta_density < 1.0
     delta_errors = _zero_errors(K, layout) if track_errors else None
+    from repro.fl.hetero import resolve_hetero
+    hetero = resolve_hetero(fl, program, params, layout)
+    if hetero is not None and len(hetero) != K:
+        raise ValueError(f"client_widths has {len(hetero)} entries for "
+                         f"K={K} clients")
     ctl = controller if controller is not None \
         else getattr(planner, "controller", None)
 
@@ -281,17 +310,24 @@ def run_federated(
                     ctl.prev_actions = np.asarray(
                         restored["controller"]["prev_actions"], np.float32)
                 start_round = int(step)
-                # fast-forward the deterministic loaders and the failure
-                # RNG so a resumed run sees the exact batches and aliveness
-                # masks of an uninterrupted one (bitwise resume —
-                # tests/test_runtime.py, tests/test_async.py)
-                loaders.skip(start_round * fl.local_iters)
-                for _ in range(start_round):
-                    injector.round_mask(K)
+                # fast-forward the deterministic loaders so a resumed run
+                # sees the exact batches of an uninterrupted one (bitwise
+                # resume — tests/test_runtime.py, tests/test_async.py).
+                # Only rounds a client was ALIVE drew from its stream, and
+                # the failure masks are keyed by round index (a pure
+                # function of the seed), so the exact per-client
+                # consumption replays without any stored state
+                alive_rounds = np.zeros(K, np.int64)
+                for rr in range(start_round):
+                    alive_rounds += injector.round_mask(K, round_idx=rr)
+                for k, ld in enumerate(loaders.loaders):
+                    ld.skip(int(alive_rounds[k]) * fl.local_iters)
 
     # --- round time accounting -------------------------------------------
     clock = RoundClock(program, fl, K, seq, params, sim=sim,
-                       transport=transport)
+                       transport=transport,
+                       compute_scale=(hetero.compute_scale
+                                      if hetero is not None else None))
 
     # --- server step: one compiled flat-buffer program per round ----------
     # (fl/flatbuf.py; cached per layout/density/quantize, reused across
@@ -318,10 +354,10 @@ def run_federated(
         bandwidths = sim.bandwidths(r) if sim is not None else None
         ops = plan.plan(r, times, bandwidths)
         # --- local training (fleet engine) ----------------------------------
-        alive = injector.round_mask(K)
+        alive = injector.round_mask(K, round_idx=r)
         idxs, rows = engine.run_round(params, loaders, ops,
                                       [int(k) for k in np.flatnonzero(alive)],
-                                      r, lr)
+                                      r, lr, hetero=hetero)
         # --- timing + straggler handling ------------------------------------
         times, comm = clock.times(ops, r)
         keep = np.ones(K, bool)
@@ -333,6 +369,7 @@ def run_federated(
         surv_idx = [idxs[i] for i in kept_pos]
         surv_w = [weights[k] for k in surv_idx]
         if kept_pos:
+            mask_rows = hetero.rows(surv_idx) if hetero is not None else None
             if fused:
                 # fused flat-buffer server step: stack survivor deltas,
                 # top-k error feedback, optional int8, weighted apply — all
@@ -341,7 +378,8 @@ def run_federated(
                                                g_flat)
                 ids = jnp.asarray(np.asarray(surv_idx, np.int32))
                 err_rows = delta_errors[ids] if track_errors else None
-                g_flat, new_err = step(g_flat, deltas, surv_w, err_rows)
+                g_flat, new_err = step(g_flat, deltas, surv_w, err_rows,
+                                       masks=mask_rows)
                 if track_errors:
                     delta_errors = delta_errors.at[ids].set(new_err)
                 params = layout.unflatten(g_flat)
@@ -351,7 +389,8 @@ def run_federated(
                     # (which store params) stay a complete description of
                     # the run state; for fp32 this would be a bitwise no-op
                     g_flat = layout.flatten(params)
-            elif not track_errors and not fl.quantize_deltas and \
+            elif hetero is None and not track_errors and \
+                    not fl.quantize_deltas and \
                     isinstance(rows, StackedRows):
                 # reference path, plain averaging, batched engine: keep the
                 # pre-fused stacked tensordot (one op per leaf) rather than
@@ -368,7 +407,7 @@ def run_federated(
                     layout, params, _delta_trees(
                         params, rows_as_list(rows, kept_pos)),
                     surv_w, err_rows, density=fl.delta_density,
-                    quantize=fl.quantize_deltas)
+                    quantize=fl.quantize_deltas, masks=mask_rows)
                 if track_errors:
                     delta_errors = delta_errors.at[ids].set(new_err)
         plan.feedback(times)

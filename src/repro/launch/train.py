@@ -145,7 +145,7 @@ def main(argv=None):
             ops = plan.ops
         else:
             ops = sim.native_ops()
-        alive = injector.round_mask(K)
+        alive = injector.round_mask(K, round_idx=r)
         client_params, losses = [], []
         for k in range(K):
             if not alive[k]:

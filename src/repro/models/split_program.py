@@ -135,6 +135,55 @@ class SplitProgram:
         """Default OP grid for planners (architectures may restrict it)."""
         return list(range(self.num_boundaries))
 
+    # ------------------------------------------------------------------
+    # width scaling (HeteroFL-style subnetwork masks — fl/hetero.py)
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _width_keep(n: int, width: float) -> int:
+        """How many of ``n`` channels a ``width``-fraction client keeps."""
+        return max(1, int(math.ceil(float(width) * n)))
+
+    def width_dims(self) -> frozenset:
+        """Axis sizes that scale with model width (hidden dims): any param
+        axis whose length is in this set is sliced by ``width_mask``.
+        Leading stacked-layer axes are never sliced (see ``width_mask``)."""
+        raise NotImplementedError
+
+    def width_mask(self, params: Params, width: float) -> Params:
+        """Static 0/1 mask tree selecting the first ``width`` fraction of
+        every hidden axis (HeteroFL-style nested subnetworks: a width-0.25
+        client's slice is a prefix of a width-0.5 client's, so averaging
+        across widths is well-defined coordinate-wise).
+
+        Same structure/dtypes as ``params``; ``mask * params`` is the weak
+        client's subnetwork, zeros elsewhere.  Axes whose size is not a
+        hidden dim (vocab rows, per-head scalars, stacked-layer leading
+        axes — any leaf under a ``*layers*`` key skips axis 0) stay full.
+        ``width=1.0`` returns all-ones.  Pure function of ``(structure,
+        width)`` — masks are static across rounds, which is what lets the
+        fused server step aggregate across widths with per-coordinate
+        coverage counts (fl/flatbuf.py)."""
+        if not 0.0 < width <= 1.0:
+            raise ValueError(f"width={width} outside (0, 1]")
+        dims = self.width_dims()
+
+        def one(path, leaf):
+            stacked = any(
+                isinstance(e, jax.tree_util.DictKey)
+                and "layers" in str(e.key) for e in path)
+            m = np.ones(leaf.shape, np.float32)
+            for ax in range(1 if stacked else 0, leaf.ndim):
+                n = leaf.shape[ax]
+                if n in dims:
+                    keep = self._width_keep(n, width)
+                    if keep < n:
+                        sl = [slice(None)] * leaf.ndim
+                        sl[ax] = slice(keep, None)
+                        m[tuple(sl)] = 0.0
+            return jnp.asarray(m, leaf.dtype)
+
+        return jax.tree_util.tree_map_with_path(one, params)
+
 
 # =============================================================================
 # VGG (the paper's own models)
@@ -179,6 +228,58 @@ class VGGSplitProgram(SplitProgram):
     def op_candidates(self) -> List[int]:
         return list(self.cfg.ops)
 
+    def width_dims(self) -> frozenset:
+        # unused: VGG masks are channel-aware (see width_mask below)
+        return frozenset()
+
+    def width_mask(self, params, width: float):
+        """Channel-aware HeteroFL mask for the conv stack: a width-``w``
+        client keeps the first ``ceil(w * C)`` output channels of every conv
+        and hidden FC.  Input channels follow the previous layer's kept
+        channels (the flatten before FC1 interleaves spatial x channel, so
+        its row mask is ``pos % C < keep``); the logits layer keeps every
+        class column."""
+        if not 0.0 < width <= 1.0:
+            raise ValueError(f"width={width} outside (0, 1]")
+        cfg = self.cfg
+        masks: list = []
+        prev_c, prev_keep = cfg.input_ch, cfg.input_ch   # full input image
+        prev_is_fc = False
+        last = len(cfg.layers) - 1
+        for i, (spec, p) in enumerate(zip(cfg.layers, params)):
+            if spec == "MP":
+                masks.append({})
+                continue
+            if spec.startswith("C"):
+                cout = p["w"].shape[-1]
+                keep = self._width_keep(cout, width)
+                w = np.ones(p["w"].shape, np.float32)
+                w[:, :, prev_keep:, :] = 0.0
+                w[:, :, :, keep:] = 0.0
+                vec = np.ones(cout, np.float32)
+                vec[keep:] = 0.0
+                masks.append({"w": w, "b": vec.copy(),
+                              "bn_scale": vec.copy(), "bn_bias": vec.copy()})
+                prev_c, prev_keep, prev_is_fc = cout, keep, False
+            else:                                        # FC
+                in_feat, units = p["w"].shape
+                keep = units if i == last else self._width_keep(units, width)
+                w = np.ones((in_feat, units), np.float32)
+                if prev_is_fc:
+                    w[prev_keep:, :] = 0.0
+                else:
+                    # flatten of (B, h, w, C): feature index -> channel
+                    # is pos % C (models/vgg.py reshape order)
+                    ch = np.arange(in_feat) % prev_c
+                    w[ch >= prev_keep, :] = 0.0
+                w[:, keep:] = 0.0
+                vec = np.ones(units, np.float32)
+                vec[keep:] = 0.0
+                masks.append({"w": w, "b": vec})
+                prev_c, prev_keep, prev_is_fc = units, keep, True
+        return jax.tree_util.tree_map(
+            lambda m, p: jnp.asarray(m, p.dtype), masks, list(params))
+
 
 # =============================================================================
 # dense / MoE / VLM transformers (via models/split.py)
@@ -216,6 +317,12 @@ class LMSplitProgram(SplitProgram):
         per = 1 if quantize else bytes_per_el
         return float(batch * self._eff_seq(seq) * self.cfg.d_model * per)
 
+    def width_dims(self) -> frozenset:
+        cfg = self.cfg
+        dims = {cfg.d_model, cfg.d_ff, cfg.q_dim, cfg.kv_dim}
+        dims.discard(cfg.vocab_size)    # vocab axes are never width-scaled
+        return frozenset(d for d in dims if d > 1)
+
 
 # =============================================================================
 # SSM (Mamba-2): same stacked-scan cut, attention-free block
@@ -249,6 +356,14 @@ class SSMSplitProgram(LMSplitProgram):
             x = self._stage(params, x, op, self.cfg.num_layers)
         hidden = L.rms_norm(x, params["final_norm"])
         return L.chunked_ce_loss(hidden, params["unembed"], batch["labels"])
+
+    def width_dims(self) -> frozenset:
+        # slice the residual stream and the out-proj input; the in-proj
+        # segment layout (z|x|B|C|dt) and per-head params stay full width
+        d_inner = ssm_model.dims(self.cfg)[0]
+        dims = {self.cfg.d_model, d_inner}
+        dims.discard(self.cfg.vocab_size)
+        return frozenset(d for d in dims if d > 1)
 
 
 # =============================================================================
@@ -322,6 +437,14 @@ class HybridSplitProgram(LMSplitProgram):
         units = [per_layer[g * P:(g + 1) * P].sum() for g in range(G)]
         units[-1] += per_layer[G * P:].sum()    # remainder rides the last unit
         return np.asarray(units, np.float64)
+
+    def width_dims(self) -> frozenset:
+        cfg = self.cfg
+        lru = (cfg.rglru.lru_width or cfg.d_model) if cfg.rglru \
+            else cfg.d_model
+        dims = {cfg.d_model, cfg.d_ff, cfg.q_dim, cfg.kv_dim, lru}
+        dims.discard(cfg.vocab_size)
+        return frozenset(d for d in dims if d > 1)
 
 
 # =============================================================================

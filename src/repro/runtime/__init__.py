@@ -6,3 +6,10 @@ from repro.runtime.straggler import (  # noqa: F401
 from repro.runtime.scheduler import EventQueue  # noqa: F401
 from repro.runtime.failures import FailureInjector  # noqa: F401
 from repro.runtime.elastic import admit_client, remove_client  # noqa: F401
+from repro.runtime.chaos import (  # noqa: F401
+    ChaosScript,
+    DrillResult,
+    ScriptedCluster,
+    check_invariants,
+    run_chaos_drill,
+)

@@ -67,6 +67,22 @@ class EventQueue:
         self.now = max(self.now, t)
         return t, payload
 
+    def drop_unreachable(self) -> List[Any]:
+        """Remove every event scheduled at ``t=inf`` and return their
+        payloads in push order.
+
+        An ``inf`` event is a client that can never report under its
+        dispatch-time conditions (dead link).  The async loop calls this at
+        aggregation boundaries to re-dispatch those clients against the
+        *current* conditions — reconnection semantics: a client behind a
+        flapping link rejoins with the current model once the link
+        recovers, instead of being lost to the fleet forever."""
+        dropped = [e for e in self._heap if math.isinf(e[0])]
+        if dropped:
+            self._heap = [e for e in self._heap if not math.isinf(e[0])]
+            heapq.heapify(self._heap)
+        return [payload for _, _, payload in sorted(dropped)]
+
     def advance(self, dt: float) -> float:
         """Move the clock forward by a modeled duration ``dt >= 0`` (e.g.
         one decode step of the serving loop); returns the new ``now``.

@@ -224,10 +224,12 @@ def test_async_stalled_fleet_ends_early():
 
 
 def test_async_rejects_sync_only_knobs():
+    # (checkpoint_dir used to be rejected too — async checkpoint/resume is
+    # now supported and drilled in tests/test_chaos.py)
     clients = split_clients(make_cifar_like(60, seed=0), 2)
     test = make_cifar_like(20, seed=9)
     for bad in (dict(deadline_factor=2.0), dict(fail_prob=0.5),
-                dict(checkpoint_dir="/tmp/nope"), dict(buffer_size=3)):
+                dict(buffer_size=3)):
         with pytest.raises(ValueError):
             run_federated_async(
                 VGG5, clients, test,
@@ -384,8 +386,9 @@ def test_fedadapt_controller_state_survives_resume(tmp_path):
 
 
 def test_failure_mask_stream_survives_resume(tmp_path):
-    """The failure-injection RNG is fast-forwarded on resume, so a resumed
-    run replays the uninterrupted run's aliveness masks."""
+    """Failure masks are keyed by round index and per-client loader
+    consumption is replayed from them, so a resumed run reproduces the
+    uninterrupted run's aliveness masks AND batch streams bitwise."""
     clients, test = _resume_base(None)
     base = dict(local_iters=2, batch_size=20, mode="fl", augment=False,
                 fail_prob=0.4, seed=0)

@@ -1,0 +1,276 @@
+"""Chaos drills: scripted churn (flapping links, mass leave/join waves,
+straggler storms) against the async virtual-clock runtime, with invariant
+checks, bitwise determinism regressions, and mid-drill checkpoint resume."""
+import numpy as np
+import pytest
+
+from repro.configs.vgg import VGG5
+from repro.core import costmodel as cm
+from repro.core.controller import FedAdaptController
+from repro.data.synthetic import make_cifar_like, split_clients
+from repro.fl.loop import FLConfig, run_federated
+from repro.runtime.chaos import (
+    ChaosScript,
+    ScriptedCluster,
+    check_invariants,
+    run_chaos_drill,
+)
+from repro.runtime.elastic import admit_client, remove_client
+
+K = 3
+
+
+def _data(num_clients=K, n=120, seed=0):
+    return (split_clients(make_cifar_like(n, seed=seed), num_clients),
+            make_cifar_like(40, seed=9))
+
+
+def _fl(**kw):
+    base = dict(rounds=6, local_iters=1, batch_size=10, mode="sfl",
+                static_op=2, augment=False, seed=0, buffer_size=2,
+                staleness_discount=0.5)
+    base.update(kw)
+    return FLConfig(**base)
+
+
+# =============================================================================
+# scripts are pure data
+# =============================================================================
+@pytest.mark.parametrize("scenario", ["flapping", "mass_waves",
+                                      "straggler_storm", "combined"])
+def test_scripts_are_deterministic_and_keep_a_survivor(scenario):
+    make = getattr(ChaosScript, scenario)
+    a = make(5, 20, seed=3)
+    b = make(5, 20, seed=3)
+    np.testing.assert_array_equal(a.up, b.up)
+    np.testing.assert_array_equal(a.slow, b.slow)
+    assert a.up.shape == (20, 5)
+    assert a.up.any(axis=1).all()          # >= 1 live client every round
+    assert (a.slow >= 1.0).all()
+    c = make(5, 20, seed=4)
+    assert (not np.array_equal(a.up, c.up)
+            or not np.array_equal(a.slow, c.slow))
+
+
+def test_script_lookups_and_clamping():
+    s = ChaosScript.flapping(4, 10, seed=0, p_down=0.5, base_bps=50e6)
+    bw = s.bandwidths(2)
+    np.testing.assert_array_equal(bw, np.where(s.up[2], 50e6, 0.0))
+    # beyond the script the last row holds
+    np.testing.assert_array_equal(s.bandwidths(99), s.bandwidths(9))
+    np.testing.assert_array_equal(s.slow_factors(-5), s.slow_factors(0))
+    # transport: dead link -> infinite transfer -> never reports
+    tr = s.transport()
+    down = int(np.flatnonzero(~s.up[2])[0]) if (~s.up[2]).any() else None
+    if down is not None:
+        assert tr.transfer_time(1e6, 2, down) == np.inf
+
+
+def test_script_validation():
+    with pytest.raises(ValueError):
+        ChaosScript(np.ones((3, 2), bool), np.ones((2, 2)))   # shape clash
+    with pytest.raises(ValueError):
+        ChaosScript(np.zeros((2, 3), bool), np.ones((2, 3)))  # all dead
+    with pytest.raises(ValueError):
+        ChaosScript(np.ones((2, 3), bool), np.full((2, 3), 0.5))  # slow < 1
+
+
+def test_scripted_cluster_scales_compute():
+    s = ChaosScript.straggler_storm(3, 8, seed=0, slow_factor=4.0,
+                                    storm_len=8, period=8)
+    sim = ScriptedCluster([1.0, 2.0, 3.0], s)
+    base = np.array([1.0, 2.0, 3.0])
+    np.testing.assert_allclose(sim.round_compute_times(None, 0),
+                               base * s.slow_factors(0))
+    np.testing.assert_array_equal(sim.round_times(None, 0),
+                                  sim.round_compute_times(None, 0))
+    with pytest.raises(ValueError):
+        ScriptedCluster([1.0], s)
+
+
+def test_check_invariants_flags_corruption():
+    hist = {"accuracy": np.array([0.3, 0.4]),
+            "virtual_time": np.array([1.0, 2.0]),
+            "round_time": np.array([1.0, 1.0]),
+            "staleness": np.array([0.0, 1.0]),
+            "agg_weight_sum": np.array([1.0, 1.0]),
+            "dropped": np.array([0, 1])}
+    assert check_invariants(hist, 3) == []
+    assert check_invariants({"accuracy": []}, 3)       # no progress
+    bad = dict(hist, virtual_time=np.array([2.0, 1.0]))
+    assert any("backwards" in m for m in check_invariants(bad, 3))
+    bad = dict(hist, staleness=np.array([-1.0, 0.0]))
+    assert any("staleness" in m for m in check_invariants(bad, 3))
+    bad = dict(hist, agg_weight_sum=np.array([0.7, 1.0]))
+    assert any("mass" in m for m in check_invariants(bad, 3))
+    bad = dict(hist, dropped=np.array([0, 5]))
+    assert any("drop count" in m for m in check_invariants(bad, 3))
+
+
+# =============================================================================
+# drills: every scenario survives with invariants intact, bitwise replayable
+# =============================================================================
+@pytest.mark.parametrize("scenario", ["flapping", "mass_waves",
+                                      "straggler_storm", "combined"])
+def test_drill_survives_and_replays_bitwise(scenario):
+    clients, test = _data()
+    script = getattr(ChaosScript, scenario)(K, 6, seed=1)
+    res = run_chaos_drill(VGG5, clients, test, _fl(), script)
+    assert res.ok(), res.violations
+    assert len(res.history["accuracy"]) == 6
+    # determinism regression: the same seed replays the drill bitwise
+    res2 = run_chaos_drill(VGG5, clients, test, _fl(), script)
+    for key in ("accuracy", "virtual_time", "staleness", "round_time",
+                "dropped", "agg_weight_sum"):
+        np.testing.assert_array_equal(res.history[key], res2.history[key],
+                                      err_msg=key)
+
+
+@pytest.mark.parametrize("engine", ["sequential", "batched"])
+def test_drill_smoke_per_engine(engine):
+    """The e2e chaos smoke CI runs per engine: combined churn, invariants
+    clean, training still makes progress."""
+    clients, test = _data()
+    script = ChaosScript.combined(K, 6, seed=2)
+    res = run_chaos_drill(VGG5, clients, test, _fl(engine=engine), script)
+    assert res.ok(), res.violations
+    assert np.isfinite(res.history["accuracy"]).all()
+
+
+def test_drill_with_permanently_dead_link():
+    """A client whose link never comes up simply never reports: the run
+    completes on the survivors, no deadlock, clock stays finite."""
+    up = np.ones((6, K), bool)
+    up[:, 0] = False
+    script = ChaosScript(up, np.ones_like(up, np.float64))
+    clients, test = _data()
+    res = run_chaos_drill(VGG5, clients, test, _fl(), script)
+    assert res.ok(), res.violations
+    assert len(res.history["accuracy"]) == 6
+
+
+def test_drill_width_hetero_composes_with_churn():
+    """HeteroFL width scaling + churn in the same drill: coverage-count
+    aggregation and staleness weighting stay healthy together."""
+    clients, test = _data()
+    script = ChaosScript.flapping(K, 6, seed=5, p_down=0.25)
+    res = run_chaos_drill(VGG5, clients, test,
+                          _fl(client_widths=(0.5, 1.0, 1.0)), script)
+    assert res.ok(), res.violations
+
+
+def test_drill_rejects_mismatched_fleet():
+    clients, test = _data()
+    with pytest.raises(ValueError):
+        run_chaos_drill(VGG5, clients, test, _fl(),
+                        ChaosScript.flapping(K + 2, 6, seed=0))
+
+
+# =============================================================================
+# mid-drill checkpoint / resume (async runtime)
+# =============================================================================
+def test_drill_resumes_bitwise_from_mid_drill_checkpoint(tmp_path):
+    """Kill the coordinator at version 3 of 6 and resume from the atomic
+    checkpoint: the resumed suffix matches the uninterrupted drill bitwise
+    (params, metrics, virtual clock, staleness, weight mass)."""
+    clients, test = _data()
+    script = ChaosScript.combined(K, 6, seed=7)
+    ck = str(tmp_path / "drill_ck")
+    full = run_chaos_drill(VGG5, clients, test,
+                           _fl(checkpoint_dir=ck, checkpoint_every=3),
+                           script)
+    assert full.ok(), full.violations
+    resumed = run_chaos_drill(VGG5, clients, test,
+                              _fl(checkpoint_dir=ck, checkpoint_every=3),
+                              script, resume=True)
+    assert resumed.ok(), resumed.violations
+    assert len(resumed.history["accuracy"]) == 3   # versions 3..5 replayed
+    for key in ("accuracy", "virtual_time", "staleness", "round_time",
+                "dropped", "agg_weight_sum"):
+        np.testing.assert_array_equal(resumed.history[key],
+                                      full.history[key][-3:], err_msg=key)
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(resumed.history["params"]),
+                    jax.tree_util.tree_leaves(full.history["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_checkpoint_requires_exact_layout(monkeypatch, tmp_path):
+    """In-flight deltas ride in the checkpoint as flat rows, so the async
+    runtime refuses lossy (non-fp32-exact) layouts instead of corrupting a
+    resume."""
+    clients, test = _data()
+    from repro.fl.async_loop import run_federated_async
+    from repro.models.split_program import VGGSplitProgram
+    orig = VGGSplitProgram.flat_layout
+
+    def lossy(self, params):
+        layout = orig(self, params)
+        layout.exact_fp32 = False
+        return layout
+
+    monkeypatch.setattr(VGGSplitProgram, "flat_layout", lossy)
+    with pytest.raises(ValueError):
+        run_federated_async(VGG5, clients, test,
+                            _fl(checkpoint_dir=str(tmp_path / "ck")))
+
+
+# =============================================================================
+# sync loop: keyed failure masks make churn resume exact
+# =============================================================================
+def test_sync_chaos_resume_with_keyed_failures(tmp_path):
+    """The synchronous loop's churn flavor (FailureInjector) resumes
+    bitwise because masks are keyed by round and per-client loader
+    consumption is replayed from those keys."""
+    clients, test = _data()
+    base = dict(rounds=6, local_iters=2, batch_size=10, mode="sfl",
+                static_op=2, augment=False, fail_prob=0.35, seed=1)
+    full = run_federated(VGG5, clients, test, FLConfig(**base))
+    ck = str(tmp_path / "sync_ck")
+    run_federated(VGG5, clients, test,
+                  FLConfig(checkpoint_dir=ck, checkpoint_every=3,
+                           **dict(base, rounds=3)))
+    resumed = run_federated(VGG5, clients, test,
+                            FLConfig(checkpoint_dir=ck, checkpoint_every=3,
+                                     **base), resume=True)
+    np.testing.assert_array_equal(resumed["dropped"][-3:],
+                                  full["dropped"][-3:])
+    np.testing.assert_array_equal(resumed["accuracy"][-3:],
+                                  full["accuracy"][-3:])
+
+
+# =============================================================================
+# elastic membership composes between drill segments
+# =============================================================================
+def test_elastic_membership_between_drill_segments():
+    """A FedAdapt fleet grows and shrinks between drill segments: the
+    controller's baseline vector tracks membership and every segment keeps
+    the runtime invariants."""
+    w = cm.vgg_workload(VGG5, batch_size=10)
+    ctl = FedAdaptController(w, VGG5.ops, num_groups=2,
+                             low_bw_threshold=None, seed=0)
+    ctl.begin([1.0, 1.5, 2.0])
+
+    clients3, test = _data(num_clients=K)
+    fl = _fl(mode="fedadapt", rounds=4)
+    res = run_chaos_drill(VGG5, clients3, test, fl,
+                          ChaosScript.flapping(K, 4, seed=1),
+                          controller=ctl)
+    assert res.ok(), res.violations
+
+    # a 4th client joins: one native-round baseline, then full membership
+    idx = admit_client(ctl, baseline_time=2.5)
+    assert idx == 3 and len(ctl.baselines) == 4
+    clients4, _ = _data(num_clients=4, n=160)
+    res = run_chaos_drill(VGG5, clients4, test, fl,
+                          ChaosScript.flapping(4, 4, seed=2),
+                          controller=ctl)
+    assert res.ok(), res.violations
+
+    # a client leaves: segment continues on the survivors
+    remove_client(ctl, 1)
+    assert len(ctl.baselines) == 3
+    res = run_chaos_drill(VGG5, clients3, test, fl,
+                          ChaosScript.flapping(K, 4, seed=3),
+                          controller=ctl)
+    assert res.ok(), res.violations

@@ -11,9 +11,13 @@ from repro.configs.vgg import VGG5
 from repro.core import costmodel as cm
 from repro.core import offload
 from repro.core.clustering import kmeans
+from repro.data.loader import dirichlet_indices
+from repro.fl.async_loop import staleness_weights
 from repro.fl.fedavg import fedavg
 from repro.kernels.quant_transfer.ops import dequantize, quantize
 from repro.kernels.topk_compress.ops import topk_compress
+from repro.models.split_program import get_split_program
+from repro.runtime.chaos import ChaosScript
 from repro.runtime.straggler import deadline_mask, reweight
 
 W5 = cm.vgg_workload(VGG5)
@@ -120,3 +124,108 @@ def test_quant_roundtrip_error_bound(seed, scale):
     err = jnp.abs(x - recon)
     rowmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
     assert bool(jnp.all(err <= rowmax / 127.0 + 1e-5))
+
+
+# =============================================================================
+# Dirichlet non-IID partitions
+# =============================================================================
+@given(st.integers(2, 8), st.floats(0.05, 50.0), st.integers(0, 1000),
+       st.integers(0, 1000))
+@settings(max_examples=40, deadline=None)
+def test_dirichlet_exact_cover_for_any_alpha(k, alpha, seed, data_seed):
+    """Every sample lands on exactly one client, every client gets at
+    least one sample, and the partition is a pure function of the seed."""
+    n = 40 + (data_seed % 200)
+    labels = np.random.RandomState(data_seed).randint(0, 10, n)
+    parts = dirichlet_indices(labels, k, alpha, seed=seed)
+    assert len(parts) == k
+    np.testing.assert_array_equal(np.sort(np.concatenate(parts)),
+                                  np.arange(n))
+    assert min(len(p) for p in parts) >= 1
+    again = dirichlet_indices(labels, k, alpha, seed=seed)
+    for a, b in zip(parts, again):
+        np.testing.assert_array_equal(a, b)
+
+
+# =============================================================================
+# HeteroFL width masks: flatten/unflatten round-trips bitwise per family
+# =============================================================================
+_WIDTH_PROGS = {}
+
+
+def _width_prog(name):
+    if name not in _WIDTH_PROGS:
+        if name == "vgg":
+            cfg = VGG5
+        else:
+            from repro.configs.registry import get_smoke_config
+            cfg = get_smoke_config(name)
+        prog = get_split_program(cfg)
+        params = prog.init(jax.random.PRNGKey(0))
+        _WIDTH_PROGS[name] = (prog, params, prog.flat_layout(params))
+    return _WIDTH_PROGS[name]
+
+
+@given(st.sampled_from(["vgg", "llama3-8b", "mamba2-780m"]),
+       st.floats(0.05, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_width_masked_params_roundtrip_bitwise(family, width):
+    """Masks are exact 0/1, masking in the tree domain commutes with the
+    flat domain, and flatten/unflatten of masked params is bitwise."""
+    prog, params, layout = _width_prog(family)
+    mask = prog.width_mask(params, width)
+    for m in jax.tree_util.tree_leaves(mask):
+        vals = np.unique(np.asarray(m))
+        assert set(vals.tolist()) <= {0.0, 1.0}
+    masked = jax.tree_util.tree_map(jnp.multiply, mask, params)
+    flat = layout.flatten(masked)
+    # flat-domain masking with the flattened mask row gives the same buffer
+    row = layout.flatten(mask)
+    np.testing.assert_array_equal(np.asarray(flat),
+                                  np.asarray(layout.flatten(params) * row))
+    back = layout.unflatten(flat)
+    for a, b in zip(jax.tree_util.tree_leaves(masked),
+                    jax.tree_util.tree_leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# =============================================================================
+# staleness weighting under arbitrary churn
+# =============================================================================
+@given(st.lists(st.floats(1.0, 1e6), min_size=1, max_size=16),
+       st.lists(st.floats(0.0, 1e6), min_size=1, max_size=16),
+       st.floats(0.0, 10.0))
+@settings(max_examples=60, deadline=None)
+def test_staleness_weights_finite_nonneg_and_bounded(sizes, stale, a):
+    n = min(len(sizes), len(stale))
+    w = staleness_weights(sizes[:n], stale[:n], a)
+    assert np.isfinite(w).all()
+    assert (w >= 0).all()
+    # the discount only ever shrinks the data-size weight
+    assert (w <= np.asarray(sizes[:n]) + 1e-9).all()
+    # more staleness never means more weight (same size)
+    w2 = staleness_weights(sizes[:n], np.asarray(stale[:n]) + 1.0, a)
+    assert (w2 <= w + 1e-12).all()
+
+
+# =============================================================================
+# chaos churn scripts
+# =============================================================================
+@given(st.sampled_from(["flapping", "mass_waves", "straggler_storm",
+                        "combined"]),
+       st.integers(2, 12), st.integers(1, 40), st.integers(0, 10_000))
+@settings(max_examples=40, deadline=None)
+def test_chaos_scripts_always_keep_a_survivor(scenario, k, rounds, seed):
+    """Any scenario at any size: >= 1 live client per round, slow factors
+    >= 1, and the whole script replays bitwise from its seed."""
+    make = getattr(ChaosScript, scenario)
+    s = make(k, rounds, seed=seed)
+    assert s.up.shape == (rounds, k)
+    assert s.up.any(axis=1).all()
+    assert (s.slow >= 1.0).all()
+    s2 = make(k, rounds, seed=seed)
+    np.testing.assert_array_equal(s.up, s2.up)
+    np.testing.assert_array_equal(s.slow, s2.slow)
+    # lookups never escape the table
+    assert np.isfinite(s.bandwidths(rounds + 5)).all()
+    assert np.isfinite(s.slow_factors(-1)).all()
