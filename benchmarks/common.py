@@ -1,9 +1,12 @@
 """Shared benchmark fixtures: the paper's measured tables, the calibrated
-simulated testbed, and helpers for timing + CSV emission."""
+simulated testbed, and helpers for timing + CSV emission + artifact
+routing (full artifacts at the repo root, smoke artifacts under the
+gitignored ``benchmarks/_smoke/``)."""
 from __future__ import annotations
 
 import time
-from typing import Dict, List, Tuple
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -31,6 +34,22 @@ PAPER_BOUNDARIES = (0.38, 0.79, 0.96)
 def calibrated_workload(cfg: VGGConfig = VGG5, batch: int = 100
                         ) -> cm.Workload:
     return cm.vgg_workload(cfg, batch_size=batch)
+
+
+def bench_out_path(name: str, smoke: bool,
+                   override: Optional[str] = None) -> str:
+    """Where a benchmark's JSON artifact goes.  Full runs keep the
+    committed ``BENCH_<name>.json`` at the repo root; ``--smoke`` runs are
+    CI throwaways and land in the gitignored ``benchmarks/_smoke/``
+    (anchored at this file, not the cwd).  ``override`` (the ``--out``
+    flag) wins outright."""
+    if override:
+        return override
+    if smoke:
+        d = Path(__file__).resolve().parent / "_smoke"
+        d.mkdir(exist_ok=True)
+        return str(d / f"BENCH_{name}.json")
+    return f"BENCH_{name}.json"
 
 
 class Csv:

@@ -1,8 +1,8 @@
 """Heterogeneity benchmarks: Dirichlet non-IID skew, HeteroFL width
 scaling, and time-to-target under scripted churn.
 
-Three sweeps, one machine-readable artifact (``BENCH_hetero.json``,
-``_smoke`` suffix under ``--smoke``):
+Three sweeps, one machine-readable artifact (``BENCH_hetero.json``;
+under ``--smoke`` it goes to the gitignored ``benchmarks/_smoke/``):
 
 * ``alpha_sweep`` — accuracy vs Dirichlet concentration: the same fleet
   trained on ``dirichlet_partition`` shards at several alphas plus the IID
@@ -125,9 +125,8 @@ def churn_time_to_target(data, test, rounds: int) -> Dict:
 
 def run(smoke: bool = False, out_path: str = None) -> Dict:
     import jax
-    if out_path is None:
-        out_path = ("BENCH_hetero_smoke.json" if smoke
-                    else "BENCH_hetero.json")
+    from benchmarks.common import bench_out_path
+    out_path = bench_out_path("hetero", smoke, out_path)
     n = 240 if smoke else 600
     rounds = 3 if smoke else 8
     alphas = (0.1, 100.0) if smoke else (0.1, 0.5, 1.0, 10.0, 100.0)
@@ -163,6 +162,6 @@ if __name__ == "__main__":
                     help="CI smoke: fewer alphas/rounds/samples")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: BENCH_hetero.json, or "
-                         "BENCH_hetero_smoke.json under --smoke)")
+                         "benchmarks/_smoke/ under --smoke)")
     args = ap.parse_args()
     run(smoke=args.smoke, out_path=args.out)

@@ -1,0 +1,234 @@
+"""Million-client fleet: two-tier aggregation + virtualized cohort state.
+
+Three cells, one machine-readable artifact (``BENCH_hierarchy.json``;
+under ``--smoke`` it goes to the gitignored ``benchmarks/_smoke/``):
+
+* ``fleet`` — a REAL ``run_federated`` round with K=1,000,000 registered
+  clients (smoke: 50,000).  The registered fleet is virtual — a
+  shared-shard sequence hands each client a view of a small pool of real
+  shards, so registration costs nothing — but everything the round does
+  is the production path: seeded cohort sampling, lazy loader
+  materialization, EFStore prefetch/fetch/store, tiered aggregation,
+  real VGG-5 local SGD for every cohort member.  The headline numbers:
+  device-resident EF is ``cohort x padded x 4`` bytes (measured off the
+  layout the run used) while the legacy dense array would need
+  ``K x padded x 4`` — 2.4 **TB** at K=1M for VGG-5, which is why the
+  pre-cohort loop simply cannot register a million clients on this host.
+* ``edge_scaling`` — aggregation wall-clock and root working-set vs
+  ``num_edges`` for a fixed 1024-row cohort on a synthetic layout:
+  ``hierarchical_apply`` timed end-to-end per edge count, plus the
+  modeled edge->root hop (``RoundClock.edge_hop_times`` semantics via
+  ``Transport``).  The root's working set is ``num_edges x padded``
+  rows — independent of the cohort behind the edges.
+* ``equivalence`` — the acceptance drill, recorded in the artifact:
+  ``cohort_size=K`` + ``num_edges=1`` reproduces the pre-refactor
+  ``run_federated`` history bitwise (accuracy, round times, params).
+
+    PYTHONPATH=src python -m benchmarks.hierarchy           # full (K=1M)
+    PYTHONPATH=src python -m benchmarks.hierarchy --smoke   # CI subset
+
+Everything is seeded: every cell is a pure function of this file.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.vgg import VGG5
+from repro.data.synthetic import make_cifar_like, split_clients
+
+
+class VirtualFleet:
+    """K registered clients backed by a small pool of shared data shards.
+
+    Registration is O(1) per client: ``__getitem__`` maps client ``k`` to
+    shard ``k % S`` (a dict of array views, nothing copied), and the lazy
+    ``FleetLoader`` only materializes streams for clients that actually
+    train.  Raising ``IndexError`` past ``K`` matters: plain ``for d in
+    fleet`` iteration uses the sequence protocol, not ``__len__``.
+    """
+
+    def __init__(self, shards: List[Dict[str, np.ndarray]], K: int):
+        self.shards = shards
+        self.K = K
+
+    def __len__(self) -> int:
+        return self.K
+
+    def __getitem__(self, k: int) -> Dict[str, np.ndarray]:
+        if not 0 <= k < self.K:
+            raise IndexError(k)
+        return self.shards[k % len(self.shards)]
+
+
+def fleet_round(K: int, cohort: int, num_edges: int, shard_size: int) -> Dict:
+    """One production round at fleet scale; returns the measured cell."""
+    import jax
+    from repro.fl.loop import FLConfig, run_federated
+    from repro.models.split_program import get_split_program
+
+    n_shards = 64
+    data = make_cifar_like(n_shards * shard_size, seed=0)
+    shards = [{k: v[i * shard_size:(i + 1) * shard_size]
+               for k, v in data.items()} for i in range(n_shards)]
+    test = make_cifar_like(40, seed=9)
+    fl = FLConfig(rounds=1, local_iters=1, batch_size=shard_size, mode="fl",
+                  augment=False, seed=0, delta_density=0.25,
+                  quantize_deltas=True, engine="batched",
+                  cohort_size=cohort, num_edges=num_edges)
+    t0 = time.time()
+    h = run_federated(VGG5, VirtualFleet(shards, K), test, fl)
+    wall = time.time() - t0
+
+    prog = get_split_program(VGG5)
+    padded = prog.flat_layout(prog.init(jax.random.PRNGKey(0))).padded
+    device_ef = cohort * padded * 4
+    dense_ef = K * padded * 4
+    cell = {
+        "K": K, "cohort": cohort, "num_edges": num_edges,
+        "padded": padded,
+        "dropped": int(h["dropped"][0]),
+        "final_acc": round(float(h["accuracy"][-1]), 4),
+        "wall_s": round(wall, 1),
+        # the memory contract: device-resident EF rows are the fetched
+        # (cohort, padded) fp32 array — bounded by the cohort, not K
+        "device_ef_bytes": device_ef,
+        "dense_ef_bytes": dense_ef,
+        "dense_over_device": round(dense_ef / device_ef, 1),
+    }
+    assert cell["dropped"] == K - cohort          # everyone else sat out
+    assert device_ef * K == dense_ef * cohort     # ratio is exactly K/C
+    print(f"K={K:>9,} cohort={cohort:<5d} edges={num_edges} "
+          f"wall={wall:6.1f}s device_ef={device_ef/2**20:8.1f}MiB "
+          f"dense_ef={dense_ef/2**30:9.1f}GiB "
+          f"(x{cell['dense_over_device']})", flush=True)
+    return cell
+
+
+def edge_scaling(cohort_rows: int, edge_counts, reps: int) -> List[Dict]:
+    """Aggregation latency + root working set vs edge count, fixed cohort."""
+    import jax
+    import jax.numpy as jnp
+    from repro.fl.comm import Transport, constant_bandwidth
+    from repro.fl.flatbuf import get_root_step, get_server_step, layout_of
+    from repro.fl.hierarchy import hierarchical_apply
+
+    # synthetic ~64k-coordinate layout: the scaling curve is about the
+    # aggregation programs, not any one model family
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (64_000,)),
+         "b": jax.random.normal(key, (1_000,))}
+    layout = layout_of(g)
+    step = get_server_step(layout, 0.05, True)    # top-k + int8 wire format
+    root = get_root_step(layout)
+    g_flat = layout.flatten(g)
+    deltas = 0.1 * jax.random.normal(key, (cohort_rows, layout.padded))
+    deltas = deltas.astype(jnp.float32)
+    w = list(np.arange(1, cohort_rows + 1, dtype=np.float64))
+    err = jnp.zeros((cohort_rows, layout.padded), jnp.float32)
+    hop = Transport(constant_bandwidth(1e9))      # 1 Gb/s edge uplinks
+    mb = layout.padded * 4.0
+
+    rows = []
+    for E in edge_counts:
+        def agg():
+            out = hierarchical_apply(step, root, g_flat, deltas, w, err,
+                                     num_edges=E)
+            jax.block_until_ready(out[0])
+            return out
+        agg()                                     # warm / compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            agg()
+        ms = (time.perf_counter() - t0) / reps * 1e3
+        hop_s = hop.round_comm_time(mb, mb, 0, 0)  # per-edge, constant bw
+        rows.append({
+            "num_edges": E, "cohort_rows": cohort_rows,
+            "agg_ms": round(ms, 2),
+            "root_rows_bytes": E * layout.padded * 4,
+            "edge_hop_s": round(hop_s, 6),
+        })
+        print(f"edges={E:<3d} agg={ms:8.2f}ms "
+              f"root_rows={E * layout.padded * 4 / 2**20:6.2f}MiB",
+              flush=True)
+    return rows
+
+
+def equivalence(rounds: int) -> Dict:
+    """cohort_size=K + num_edges=1 == the pre-refactor loop, bitwise."""
+    from repro.fl.loop import FLConfig, run_federated
+
+    K = 4
+    clients = split_clients(make_cifar_like(30 * K, seed=0), K)
+    test = make_cifar_like(40, seed=9)
+    base = dict(rounds=rounds, local_iters=1, batch_size=10, mode="sfl",
+                static_op=2, augment=True, seed=0, delta_density=0.25,
+                quantize_deltas=True)
+    legacy = run_federated(VGG5, clients, test, FLConfig(**base))
+    tiered = run_federated(VGG5, clients, test,
+                           FLConfig(**base, cohort_size=K, num_edges=1))
+    import jax
+    bitwise = bool(
+        np.array_equal(legacy["accuracy"], tiered["accuracy"])
+        and np.array_equal(legacy["round_time"], tiered["round_time"])
+        and all(np.array_equal(np.asarray(a), np.asarray(b))
+                for a, b in zip(jax.tree_util.tree_leaves(legacy["params"]),
+                                jax.tree_util.tree_leaves(tiered["params"]))))
+    out = {"K": K, "rounds": rounds, "bitwise": bitwise,
+           "final_acc": round(float(tiered["accuracy"][-1]), 4)}
+    print(f"equivalence: bitwise={bitwise}", flush=True)
+    assert bitwise, "cohort_size=K + num_edges=1 must be bitwise-legacy"
+    return out
+
+
+def run(smoke: bool = False, out_path: str = None) -> Dict:
+    import jax
+    from benchmarks.common import bench_out_path
+    out_path = bench_out_path("hierarchy", smoke, out_path)
+    if smoke:
+        fleet_cells = [fleet_round(50_000, 32, 4, shard_size=8)]
+        scaling = edge_scaling(64, (1, 4, 16), reps=1)
+        eq = equivalence(rounds=2)
+    else:
+        fleet_cells = [fleet_round(1_000_000, 64, 8, shard_size=8),
+                       fleet_round(1_000_000, 256, 8, shard_size=8)]
+        scaling = edge_scaling(1024, (1, 2, 4, 8, 16, 32), reps=3)
+        eq = equivalence(rounds=3)
+    payload = {
+        "backend": jax.default_backend(), "smoke": smoke,
+        "fleet": fleet_cells,
+        "edge_scaling": scaling,
+        "equivalence": eq,
+    }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def bench_hierarchy():
+    """benchmarks/run.py hook: smoke subset, CSV-derived summary."""
+    payload = run(smoke=True)
+    f = payload["fleet"][0]
+    agg = {r["num_edges"]: r["agg_ms"] for r in payload["edge_scaling"]}
+    return 0.0, (f"K={f['K']} cohort={f['cohort']}: device EF "
+                 f"{f['device_ef_bytes'] >> 20}MiB vs dense "
+                 f"{f['dense_ef_bytes'] >> 30}GiB "
+                 f"(x{f['dense_over_device']}); agg ms by edges {agg}; "
+                 f"cohort=K single-edge bitwise="
+                 f"{payload['equivalence']['bitwise']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: K=50k, small cohort, fewer edge counts")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_hierarchy.json, or "
+                         "benchmarks/_smoke/ under --smoke)")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_path=args.out)

@@ -17,6 +17,7 @@ import traceback
 from benchmarks import paper_validation as pv
 from benchmarks.async_vs_sync import bench_async_vs_sync
 from benchmarks.hetero import bench_hetero
+from benchmarks.hierarchy import bench_hierarchy
 from benchmarks.server_step import bench_server_step
 from benchmarks.serving import bench_serving
 
@@ -95,6 +96,7 @@ BENCHES = {
     "noniid": pv.bench_noniid,
     "async_vs_sync": bench_async_vs_sync,
     "hetero": bench_hetero,
+    "hierarchy": bench_hierarchy,
     "server_step": bench_server_step,
     "serving": bench_serving,
     # system benches

@@ -103,10 +103,10 @@ def bench_cell(program, params, K: int, density: float, quantize: bool,
 
 
 def run(smoke: bool = False, out_path: str = None) -> Dict:
-    if out_path is None:
-        # smoke runs must not clobber the recorded full-sweep artifact
-        out_path = ("BENCH_server_step_smoke.json" if smoke
-                    else "BENCH_server_step.json")
+    # smoke runs must not clobber the recorded full-sweep artifact: they
+    # land in the gitignored benchmarks/_smoke/
+    from benchmarks.common import bench_out_path
+    out_path = bench_out_path("server_step", smoke, out_path)
     models = [("vgg5", VGG5)]
     if not smoke:
         models.append(("llama3-8b-smoke", get_smoke_config("llama3-8b")))
@@ -157,6 +157,6 @@ if __name__ == "__main__":
                     help="CI smoke: K=4, averaging scenario only")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: BENCH_server_step.json, "
-                         "or BENCH_server_step_smoke.json under --smoke)")
+                         "or benchmarks/_smoke/ under --smoke)")
     args = ap.parse_args()
     run(smoke=args.smoke, out_path=args.out)

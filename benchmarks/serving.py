@@ -28,8 +28,9 @@ fractions of that.
     PYTHONPATH=src python -m benchmarks.serving           # full sweep
     PYTHONPATH=src python -m benchmarks.serving --smoke   # CI: tiny model
 
-Emits machine-readable ``BENCH_serving.json`` (``_smoke`` suffix under
-``--smoke`` so CI never clobbers the recorded artifact).
+Emits machine-readable ``BENCH_serving.json`` (under ``--smoke`` it goes
+to the gitignored ``benchmarks/_smoke/`` so CI never clobbers the
+recorded artifact).
 """
 from __future__ import annotations
 
@@ -152,9 +153,8 @@ def bench_level(cfg, params, layout, slots: int, rate: float, load: float,
 
 
 def run(smoke: bool = False, out_path: str = None) -> Dict:
-    if out_path is None:
-        out_path = "BENCH_serving_smoke.json" if smoke \
-            else "BENCH_serving.json"
+    from benchmarks.common import bench_out_path
+    out_path = bench_out_path("serving", smoke, out_path)
     cfg = get_smoke_config("qwen3-0.6b") if smoke else LM16M
     slots = 4 if smoke else 8
     n_requests = 12 if smoke else 60
@@ -217,6 +217,6 @@ if __name__ == "__main__":
                     help="CI smoke: tiny model, 2 levels")
     ap.add_argument("--out", default=None,
                     help="output JSON (default: BENCH_serving.json, or "
-                         "BENCH_serving_smoke.json under --smoke)")
+                         "benchmarks/_smoke/ under --smoke)")
     args = ap.parse_args()
     run(smoke=args.smoke, out_path=args.out)

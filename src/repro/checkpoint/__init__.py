@@ -1,1 +1,6 @@
-from repro.checkpoint.ckpt import CheckpointManager, restore_tree, save_tree  # noqa: F401
+from repro.checkpoint.ckpt import (  # noqa: F401
+    CheckpointManager,
+    leaf_shapes,
+    restore_tree,
+    save_tree,
+)

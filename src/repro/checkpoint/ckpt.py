@@ -71,6 +71,16 @@ def restore_tree(path: str, template: Params) -> Params:
         jax.tree_util.tree_structure(template), leaves)
 
 
+def leaf_shapes(path: str) -> dict:
+    """Shapes of every stored leaf, keyed by '/'-joined path — the peek
+    that lets callers build a template for *variable-shape* leaves (the
+    sparse ``ef/ids``/``ef/rows`` EF snapshot of fl/state.py, whose
+    touched-row count is data-dependent) before a strict ``restore_tree``.
+    """
+    with np.load(path) as z:
+        return {k: tuple(z[k].shape) for k in z.files if k != "__step__"}
+
+
 def checkpoint_step(path: str) -> Optional[int]:
     with np.load(path) as z:
         if "__step__" in z.files:
@@ -108,3 +118,10 @@ class CheckpointManager:
         if path is None:
             return None, None
         return restore_tree(path, template), checkpoint_step(path)
+
+    def latest_shapes(self) -> Optional[dict]:
+        """``leaf_shapes`` of the newest checkpoint (None when empty) —
+        lets resume paths size variable-shape template leaves before the
+        strict restore."""
+        path = self.latest_path()
+        return leaf_shapes(path) if path is not None else None

@@ -24,7 +24,7 @@ Three pieces:
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -164,52 +164,132 @@ class ClientLoader:
 
 
 class FleetLoader:
-    """K deterministic per-client streams behind one batched handle."""
+    """K deterministic per-client streams behind one batched handle.
+
+    Client streams are materialized *lazily*: ``for_clients`` records the
+    fleet description and builds each ``ClientLoader`` on first use, so a
+    million-client registered fleet with a sampled cohort (fl/cohort.py)
+    only ever instantiates the clients that actually train —
+    ``materialized`` counts them, and benchmarks/hierarchy.py asserts the
+    bound.  An untouched client's stream state is the initial ``(epoch=0,
+    cursor=0)``, so ``state``/``restore`` keep the bitwise-resume guarantee
+    without forcing materialization: restoring the initial state is a
+    no-op.  Each materialized stream is the same ``ClientLoader(seed + k)``
+    stream the eager loader always built — laziness never changes what any
+    client sees.
+    """
 
     def __init__(self, loaders: Sequence[ClientLoader]):
-        self.loaders: List[ClientLoader] = list(loaders)
-        sizes = {ld.batch_size for ld in self.loaders}
+        # eager construction (back-compat): validate batch uniformity now
+        self._loaders: Dict[int, ClientLoader] = dict(enumerate(loaders))
+        self._K = len(self._loaders)
+        self._data: Optional[Sequence[Dict[str, np.ndarray]]] = None
+        self._batch_size = None
+        self._seed = 0
+        sizes = {ld.batch_size for ld in self._loaders.values()}
         if len(sizes) > 1:
             raise ValueError(
                 f"FleetLoader needs a uniform batch size to stack clients; "
                 f"got {sorted(sizes)} (some client datasets are smaller than "
                 f"the requested batch size)")
+        self._bs_seen = sizes.pop() if sizes else None
 
     @classmethod
     def for_clients(cls, clients_data: Sequence[Dict[str, np.ndarray]],
                     batch_size: int, seed: int = 0) -> "FleetLoader":
-        """One ``ClientLoader(seed + k)`` per client — the exact streams the
-        sequential federated loop has always used."""
-        return cls([ClientLoader(d, batch_size, seed=seed + k)
-                    for k, d in enumerate(clients_data)])
+        """One lazy ``ClientLoader(seed + k)`` per client — the exact
+        streams the sequential federated loop has always used, built on
+        first draw."""
+        self = cls.__new__(cls)
+        self._loaders = {}
+        self._K = len(clients_data)
+        self._data = clients_data
+        self._batch_size = batch_size
+        self._seed = seed
+        # the eager constructor's uniform-batch contract, checked upfront
+        # from dataset lengths alone — no stream is materialized (building
+        # a ClientLoader costs a seeded permutation per client; a len() is
+        # free even at K=1M)
+        sizes = {min(batch_size, len(next(iter(d.values()))))
+                 for d in clients_data}
+        if len(sizes) > 1:
+            raise ValueError(
+                f"FleetLoader needs a uniform batch size to stack clients; "
+                f"got {sorted(sizes)} (some client datasets are smaller than "
+                f"the requested batch size)")
+        self._bs_seen = sizes.pop() if sizes else None
+        return self
+
+    def _get(self, k: int) -> ClientLoader:
+        ld = self._loaders.get(k)
+        if ld is None:
+            if self._data is None:
+                raise IndexError(f"client {k} outside eager fleet")
+            ld = ClientLoader(self._data[k], self._batch_size,
+                              seed=self._seed + k)
+            # the uniform-batch check the eager path does upfront, applied
+            # at materialization time (the first mismatching client raises)
+            if self._bs_seen is None:
+                self._bs_seen = ld.batch_size
+            elif ld.batch_size != self._bs_seen:
+                raise ValueError(
+                    f"FleetLoader needs a uniform batch size to stack "
+                    f"clients; got {sorted({self._bs_seen, ld.batch_size})} "
+                    f"(some client datasets are smaller than the requested "
+                    f"batch size)")
+            self._loaders[k] = ld
+        return ld
+
+    @property
+    def loaders(self) -> List[ClientLoader]:
+        """All K streams as a list — materializes the whole fleet (the
+        eager legacy view; prefer per-client access at fleet scale)."""
+        return [self._get(k) for k in range(self._K)]
+
+    @property
+    def materialized(self) -> int:
+        """How many client streams have actually been instantiated."""
+        return len(self._loaders)
 
     def __len__(self) -> int:
-        return len(self.loaders)
+        return self._K
 
     def next_batch(self, k: int) -> Dict[str, np.ndarray]:
         """Client ``k``'s next batch (the sequential engine's draw)."""
-        return self.loaders[k].next_batch()
+        return self._get(k).next_batch()
 
     def next_batches(self, k_indices: Sequence[int]) -> Dict[str, np.ndarray]:
         """Draw the next batch of every listed client, stacked ``(G, B, ...)``
         in ``k_indices`` order.  Each client advances exactly one draw."""
-        batches = [self.loaders[k].next_batch() for k in k_indices]
+        batches = [self._get(k).next_batch() for k in k_indices]
         return {key: np.stack([b[key] for b in batches])
                 for key in batches[0]}
 
     def skip(self, n: int):
-        """Fast-forward every client stream ``n`` draws (resume)."""
-        for ld in self.loaders:
-            ld.skip(n)
+        """Fast-forward every client stream ``n`` draws (legacy resume;
+        materializes the fleet — cohort-aware resume uses
+        ``skip_client``)."""
+        for k in range(self._K):
+            self._get(k).skip(n)
+
+    def skip_client(self, k: int, n: int):
+        """Fast-forward one client's stream ``n`` draws (cohort-aware
+        resume: only clients that ever trained need touching)."""
+        if n:
+            self._get(k).skip(n)
 
     def state(self) -> List[Tuple[int, int]]:
-        return [ld.state() for ld in self.loaders]
+        """Per-client ``(epoch, cursor)``; unmaterialized streams report
+        the initial ``(0, 0)`` without being built."""
+        return [self._loaders[k].state() if k in self._loaders else (0, 0)
+                for k in range(self._K)]
 
     def restore(self, states: Sequence[Tuple[int, int]]):
-        if len(states) != len(self.loaders):
+        if len(states) != self._K:
             raise ValueError(
                 f"fleet state has {len(states)} client streams, loader has "
-                f"{len(self.loaders)} — refusing a partial restore that "
+                f"{self._K} — refusing a partial restore that "
                 f"would silently break bitwise resume")
-        for ld, st in zip(self.loaders, states):
-            ld.restore(st)
+        for k, st in enumerate(states):
+            if tuple(st) != (0, 0) or k in self._loaders:
+                self._get(k).restore(tuple(st))

@@ -4,12 +4,21 @@ from repro.fl.fedavg import (  # noqa: F401
     fedavg_delta_stacked,
     model_bytes,
 )
+from repro.fl.cohort import CohortSampler, EFStore  # noqa: F401
 from repro.fl.flatbuf import (  # noqa: F401
     FlatLayout,
+    RootStep,
     ServerStep,
+    get_root_step,
     get_server_step,
     layout_of,
     reference_server_step,
+)
+from repro.fl.hierarchy import (  # noqa: F401
+    EdgeAggregator,
+    EdgeUpdate,
+    assign_edges,
+    hierarchical_apply,
 )
 from repro.fl.fleet import (  # noqa: F401
     BatchedEngine,
@@ -21,8 +30,10 @@ from repro.fl.comm import (  # noqa: F401
     Transport,
     constant_bandwidth,
     device_bandwidths,
+    indexed_bandwidths,
     paper_schedule,
 )
+from repro.fl.state import async_state_tree, base_state_tree  # noqa: F401
 from repro.fl.planner import (  # noqa: F401
     FedAdaptPlanner,
     GreedyPlanner,

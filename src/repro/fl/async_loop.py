@@ -37,15 +37,27 @@ EventQueue``; clients on dead links (``Transport`` returns ``inf``) simply
 never report, and a fully-stalled fleet ends the run early instead of
 spinning.
 
+Fleet scale mirrors the synchronous loop: ``FLConfig.cohort_size`` keeps
+exactly C clients in flight — reporters are replaced at every aggregation
+boundary by a seeded draw from the idle fleet (``fl.cohort.CohortSampler
+.pick``, keyed by server version), EF state is virtualized in a host-side
+``EFStore``, and ``FLConfig.num_edges`` routes each buffered aggregation
+through the two-tier edge/root server (fl/hierarchy.py) with the
+edge->root hop charged to an ``edge_time`` history column via
+``edge_transport``.  ``cohort_size=K`` degenerates to the legacy
+all-clients dispatch bitwise.
+
 Checkpoint/resume: ``FLConfig.checkpoint_dir`` + ``checkpoint_every``
 snapshot the run at aggregation boundaries.  The key invariant is that at
-a boundary (buffer flushed, reporters re-dispatched) every client has
-exactly ONE in-flight report event, so the whole scheduler state is a
-fixed-shape table: K timestamps (``inf`` for dead links) plus K report
-payloads as flat delta rows.  A resumed run replays the remaining
-aggregations bitwise (``resume=True``; the drill in tests/test_chaos.py) —
-this is what makes mid-drill chaos replay exact.  Requires an fp32 layout
-(``FlatLayout.exact_fp32``) so delta rows round-trip bitwise.
+a boundary (buffer flushed, reporters replaced) exactly C clients (K
+without a cohort) have ONE in-flight report event each, so the whole
+scheduler state is a fixed-shape table: C timestamps (``inf`` for dead
+links) plus C report payloads as flat delta rows (assembled by
+``fl.state.async_state_tree`` — shared with the sync loop's tree).  A
+resumed run replays the remaining aggregations bitwise (``resume=True``;
+the drill in tests/test_chaos.py) — this is what makes mid-drill chaos
+replay exact.  Requires an fp32 layout (``FlatLayout.exact_fp32``) so
+delta rows round-trip bitwise.
 """
 from __future__ import annotations
 
@@ -60,19 +72,25 @@ from repro.checkpoint import CheckpointManager
 from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
 from repro.data.loader import FleetLoader
+from repro.fl.cohort import CohortSampler, EFStore
 from repro.fl.comm import Transport
-from repro.fl.flatbuf import get_server_step, reference_server_step
+from repro.fl.flatbuf import (
+    get_root_step,
+    get_server_step,
+    reference_server_step,
+)
 from repro.fl.fleet import get_engine, rows_as_list
 from repro.fl.hetero import resolve_hetero
+from repro.fl.hierarchy import hierarchical_apply
 from repro.fl.loop import (
     FLConfig,
     RoundClock,
-    _ckpt_tree,
     _delta_trees,
     _resolve_planner,
     _zero_errors,
 )
 from repro.fl.planner import Planner
+from repro.fl.state import async_state_tree, ef_template_len
 from repro.models.split_program import get_split_program
 from repro.runtime.scheduler import EventQueue
 from repro.runtime.straggler import reweight
@@ -99,31 +117,6 @@ class _Report:
     comm: float
 
 
-def _async_ckpt_template(params, delta_errors, track_errors: bool, ctl,
-                         K: int, layout):
-    """Fixed-shape async checkpoint: the sync tree (params + aux state)
-    plus the scheduler table — K in-flight report events (timestamps may be
-    ``inf``) with their deltas as flat layout rows — the virtual clock, the
-    planner inputs and the loader cursors."""
-    tree = _ckpt_tree(params, delta_errors, track_errors, ctl, K,
-                      template=True)
-    tree["async"] = {
-        "clock": np.zeros(2, np.float64),          # [now, last_agg_clock]
-        "times": np.zeros(K, np.float64),
-        "comm": np.zeros(K, np.float64),
-        "ops": np.zeros(K, np.int32),
-        "loader_state": np.zeros((K, 2), np.int64),
-        "ev_t": np.zeros(K, np.float64),
-        "ev_client": np.zeros(K, np.int32),
-        "ev_version": np.zeros(K, np.int32),
-        "ev_op": np.zeros(K, np.int32),
-        "ev_dur": np.zeros(K, np.float64),
-        "ev_comm": np.zeros(K, np.float64),
-        "ev_delta": np.zeros((K, layout.padded), np.float32),
-    }
-    return tree
-
-
 def run_federated_async(
     cfg,
     clients_data: List[Dict[str, np.ndarray]],
@@ -133,6 +126,7 @@ def run_federated_async(
     controller: Optional[FedAdaptController] = None,
     planner: Optional[Planner] = None,
     transport: Optional[Transport] = None,
+    edge_transport: Optional[Transport] = None,
     on_aggregate: Optional[Callable[..., None]] = None,
     resume: bool = False,
 ) -> Dict[str, np.ndarray]:
@@ -163,9 +157,19 @@ def run_federated_async(
     """
     program = get_split_program(cfg)
     K = len(clients_data)
-    buffer_size = fl.buffer_size if fl.buffer_size > 0 else K
-    if not 1 <= buffer_size <= K:
-        raise ValueError(f"buffer_size={buffer_size} outside [1, K={K}]")
+    if not 0 <= fl.cohort_size <= K:
+        raise ValueError(f"cohort_size={fl.cohort_size} outside [0, K={K}]")
+    if fl.num_edges < 0:
+        raise ValueError(f"num_edges={fl.num_edges} must be >= 0")
+    # C = the in-flight set: with a cohort, exactly C clients are training
+    # at any instant — reporters are replaced by a seeded draw from the
+    # idle fleet at each boundary, so the run walks the whole fleet while
+    # the server's working set stays O(C)
+    C = fl.cohort_size if fl.cohort_size > 0 else K
+    buffer_size = fl.buffer_size if fl.buffer_size > 0 else C
+    if not 1 <= buffer_size <= C:
+        raise ValueError(f"buffer_size={buffer_size} outside [1, C={C}] "
+                         f"(the in-flight cohort)")
     if fl.deadline_factor > 0 or fl.fail_prob > 0:
         raise ValueError(
             "the async runtime replaces deadline drops and failure masks "
@@ -191,8 +195,21 @@ def run_federated_async(
     seq = (clients_data[0]["tokens"].shape[1]
            if "tokens" in clients_data[0] else None)
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
+    if fl.num_edges > 0 and fl.server_step != "fused":
+        raise ValueError(
+            "hierarchical aggregation (num_edges > 0) runs through the "
+            "fused flat-buffer server step; server_step='reference' is the "
+            "per-client oracle it is tested against, not a tiered path")
+    cohort = (CohortSampler(K, C, seed=fl.seed)
+              if fl.cohort_size > 0 else None)
     track_errors = fl.delta_density < 1.0
-    delta_errors = _zero_errors(K, layout) if track_errors else None
+    if not track_errors:
+        delta_errors = None
+    elif cohort is not None:
+        delta_errors = EFStore(K, layout.padded)
+    else:
+        delta_errors = _zero_errors(K, layout)
+    virtualized = isinstance(delta_errors, EFStore)
     hetero = resolve_hetero(fl, program, params, layout)
     if hetero is not None and len(hetero) != K:
         raise ValueError(f"client_widths has {len(hetero)} entries for "
@@ -203,23 +220,31 @@ def run_federated_async(
     # (fl/flatbuf.py) — sync and async aggregate through one executable
     srv = get_server_step(layout, fl.delta_density, fl.quantize_deltas) \
         if fused else None
+    root = get_root_step(layout) if fused and fl.num_edges > 0 else None
     g_flat = layout.flatten(params) if fused else None
     clock = RoundClock(program, fl, K, seq, params, sim=sim,
                        transport=transport,
                        compute_scale=(hetero.compute_scale
-                                      if hetero is not None else None))
+                                      if hetero is not None else None),
+                       edge_transport=edge_transport)
 
     mgr = CheckpointManager(fl.checkpoint_dir) if fl.checkpoint_dir else None
     version = 0            # server params version == aggregations so far
     queue = EventQueue()
     comm = np.zeros(K)
     current_ops = [native_op] * K
+    in_flight = np.zeros(K, bool)
     last_agg_clock = 0.0
     restored_state = None
     if mgr is not None and resume:
-        restored_state, step = mgr.restore_latest(
-            _async_ckpt_template(params, delta_errors, track_errors, ctl, K,
-                                 layout))
+        # shape peek first: the virtualized EF snapshot is sparse with a
+        # data-dependent touched-row count (fl/state.py)
+        shapes = mgr.latest_shapes()
+        if shapes is not None:
+            restored_state, step = mgr.restore_latest(
+                async_state_tree(params, delta_errors, ctl, K, C, layout,
+                                 template=True,
+                                 ef_len=ef_template_len(shapes)))
 
     if restored_state is not None:
         version = int(step)
@@ -227,8 +252,13 @@ def run_federated_async(
         if fused:
             g_flat = layout.flatten(params)
         if track_errors:
-            delta_errors = jnp.asarray(restored_state["delta_errors"],
-                                       jnp.float32)
+            if virtualized:
+                delta_errors.restore(
+                    np.asarray(restored_state["ef"]["ids"], np.int64),
+                    restored_state["ef"]["rows"])
+            else:
+                delta_errors = jnp.asarray(restored_state["delta_errors"],
+                                           jnp.float32)
         if ctl is not None:
             ctl.baselines = np.asarray(
                 restored_state["controller"]["baselines"], np.float64)
@@ -241,10 +271,11 @@ def run_federated_async(
         comm = np.asarray(st["comm"], np.float64)
         current_ops = [int(o) for o in st["ops"]]
         loaders.restore([(int(e), int(c)) for e, c in st["loader_state"]])
-        # re-inflate the K in-flight report events in saved (t, seq) order:
+        # re-inflate the C in-flight report events in saved (t, seq) order:
         # pushes re-assign fresh FIFO sequence numbers, so same-time ties
         # pop in the same order as the uninterrupted run
-        for i in range(K):
+        in_flight[np.asarray(st["ev_client"], np.int64)] = True
+        for i in range(C):
             row = jnp.asarray(st["ev_delta"][i], jnp.float32)
             rpt = _Report(int(st["ev_client"][i]),
                           int(st["ev_version"][i]),
@@ -268,7 +299,7 @@ def run_federated_async(
     hist: Dict[str, list] = {"accuracy": [], "round_time": [], "ops": [],
                              "times": [], "comm_time": [], "dropped": [],
                              "virtual_time": [], "staleness": [],
-                             "agg_weight_sum": []}
+                             "agg_weight_sum": [], "edge_time": []}
     eval_fn = jax.jit(lambda p, b: program.eval_metric(p, b))
     test_batch = {k: jnp.asarray(v) for k, v in test_data.items()}
 
@@ -280,6 +311,7 @@ def run_federated_async(
                       else 1.0)
         bandwidths = sim.bandwidths(version) if sim is not None else None
         ops = plan.plan(version, times, bandwidths)
+        in_flight[list(ks)] = True
         for k in ks:
             current_ops[k] = int(ops[k])
         idxs, rows = engine.run_round(params, loaders, ops, list(ks),
@@ -299,33 +331,20 @@ def run_federated_async(
             queue.push(queue.now + rpt.time, rpt)
 
     def save_checkpoint() -> None:
-        """Snapshot at an aggregation boundary: buffer empty, every client
-        has exactly one in-flight event (the fixed-shape invariant)."""
-        heap = sorted(queue._heap)          # (t, seq, rpt): pop order
-        assert len(heap) == K, "checkpoint off an aggregation boundary"
-        tree = _ckpt_tree(params, delta_errors, track_errors, ctl, K)
-        tree["async"] = {
-            "clock": np.asarray([queue.now, last_agg_clock], np.float64),
-            "times": np.asarray(times, np.float64),
-            "comm": np.asarray(comm, np.float64),
-            "ops": np.asarray(current_ops, np.int32),
-            "loader_state": np.asarray(loaders.state(), np.int64),
-            "ev_t": np.asarray([t for t, _, _ in heap], np.float64),
-            "ev_client": np.asarray([r.client for _, _, r in heap],
-                                    np.int32),
-            "ev_version": np.asarray([r.version for _, _, r in heap],
-                                     np.int32),
-            "ev_op": np.asarray([r.op for _, _, r in heap], np.int32),
-            "ev_dur": np.asarray([r.time for _, _, r in heap], np.float64),
-            "ev_comm": np.asarray([r.comm for _, _, r in heap], np.float64),
-            "ev_delta": jnp.stack(
-                [r.delta if fused else layout.flatten(r.delta)
-                 for _, _, r in heap]),
-        }
-        mgr.save(tree, version)
+        """Snapshot at an aggregation boundary: buffer empty, exactly C
+        clients in flight (the fixed-shape invariant; fl/state.py asserts
+        the count)."""
+        events = [(t, rpt, rpt.delta if fused else layout.flatten(rpt.delta))
+                  for t, _, rpt in queue.snapshot()]
+        mgr.save(async_state_tree(
+            params, delta_errors, ctl, K, C, layout,
+            clock=[queue.now, last_agg_clock], times=times, comm=comm,
+            ops=current_ops, loader_state=loaders.state(), events=events),
+            version)
 
     if restored_state is None:
-        dispatch(list(range(K)))
+        dispatch([int(k) for k in cohort.members(0)] if cohort is not None
+                 else list(range(K)))
     buffer: List[_Report] = []
 
     while version < fl.rounds:
@@ -333,6 +352,7 @@ def run_federated_async(
             _, rpt = queue.pop()
             times[rpt.client] = rpt.time
             comm[rpt.client] = rpt.comm
+            in_flight[rpt.client] = False
             buffer.append(rpt)
             continue
         if not buffer:
@@ -343,6 +363,7 @@ def run_federated_async(
         # buffer_size.
 
         # --- server step: staleness-discounted buffered FedAvg -----------
+        edges_used = 0
         buffer.sort(key=lambda e: e.client)
         stale = {e.client: version - e.version for e in buffer}
         fresh = [e for e in buffer
@@ -357,15 +378,27 @@ def run_federated_async(
                 w_full[e.client] = wk
             weights = reweight(w_full, w_full > 0)
             w_list = [weights[e.client] for e in fresh]
-            ids = jnp.asarray(
-                np.asarray([e.client for e in fresh], np.int32))
-            err_rows = delta_errors[ids] if track_errors else None
-            mask_rows = (hetero.rows([e.client for e in fresh])
+            fresh_ids = [e.client for e in fresh]
+            ids = jnp.asarray(np.asarray(fresh_ids, np.int32))
+            if not track_errors:
+                err_rows = None
+            elif virtualized:
+                err_rows = delta_errors.fetch(fresh_ids)
+            else:
+                err_rows = delta_errors[ids]
+            mask_rows = (hetero.rows(fresh_ids)
                          if hetero is not None else None)
             if fused:
                 stacked = jnp.stack([e.delta for e in fresh])
-                g_flat, new_err = srv(g_flat, stacked, w_list, err_rows,
-                                      masks=mask_rows)
+                if fl.num_edges > 0:
+                    # two-tier server (fl/hierarchy.py): per-edge reduce of
+                    # the buffered rows, root combine + apply
+                    g_flat, new_err, edges_used = hierarchical_apply(
+                        srv, root, g_flat, stacked, w_list, err_rows,
+                        mask_rows, num_edges=fl.num_edges)
+                else:
+                    g_flat, new_err = srv(g_flat, stacked, w_list, err_rows,
+                                          masks=mask_rows)
                 params = layout.unflatten(g_flat)
                 if not layout.exact_fp32:
                     # keep the flat master equal to the rounded params
@@ -377,12 +410,23 @@ def run_federated_async(
                     err_rows, density=fl.delta_density,
                     quantize=fl.quantize_deltas, masks=mask_rows)
             if track_errors:
-                delta_errors = delta_errors.at[ids].set(new_err)
+                if virtualized:
+                    delta_errors.store(fresh_ids, new_err)
+                else:
+                    delta_errors = delta_errors.at[ids].set(new_err)
             mean_stale = float(s.mean())
             weight_sum = float(np.sum(w_list))
         else:
             mean_stale = 0.0
             weight_sum = 0.0
+        # edge->root hop of the two-tier server: reported as its own
+        # history column, charged through edge_transport at this
+        # aggregation's version (the virtual clock is event-driven and is
+        # not advanced by the hop — a free hop without an edge_transport)
+        edge_wall = 0.0
+        if edges_used and edge_transport is not None:
+            edge_wall = float(np.max(
+                clock.edge_hop_times(edges_used, version)))
         version += 1
         if on_aggregate is not None:
             on_aggregate(version, params, g_flat=g_flat if fused else None)
@@ -397,11 +441,23 @@ def run_federated_async(
         hist["virtual_time"].append(queue.now)
         hist["staleness"].append(mean_stale)
         hist["agg_weight_sum"].append(weight_sum)
+        hist["edge_time"].append(edge_wall)
         last_agg_clock = queue.now
-        # --- re-dispatch the reporting clients at the new version --------
-        redispatch = sorted(e.client for e in buffer)
+        # --- re-dispatch at the new version ------------------------------
+        # without a cohort: the reporting clients themselves (legacy);
+        # with one: a seeded draw of |reporters| replacements from the
+        # idle fleet, keyed by version — the in-flight set stays exactly C
+        # while participation walks the whole registered fleet.  With
+        # cohort_size=K the idle set IS the reporter set, so the draw
+        # degenerates to the legacy redispatch bitwise.
+        reporters = sorted(e.client for e in buffer)
         buffer = []
         if version < fl.rounds:
+            if cohort is not None:
+                redispatch = [int(k) for k in cohort.pick(
+                    version, np.flatnonzero(~in_flight), len(reporters))]
+            else:
+                redispatch = reporters
             dispatch(redispatch)
             # --- reconnection: unreachable clients re-register -----------
             # a client dispatched behind a dead link holds an inf event;

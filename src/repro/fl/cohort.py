@@ -1,0 +1,194 @@
+"""Cohort sampling and virtualized error-feedback state for fleets far
+larger than any device buffer.
+
+FedAdapt's loops historically assumed every registered client participates
+in every round, with the per-client top-k error-feedback (EF) state held as
+one dense ``(K, padded)`` fp32 device array.  Both assumptions cap ``K`` in
+the thousands.  This module removes them:
+
+* ``CohortSampler`` — a seeded per-round subset of the registered fleet.
+  ``members(round_idx)`` is a *pure function* of ``(seed, round_idx, K,
+  cohort_size)`` — the same keyed-RNG idiom as
+  ``runtime.failures.FailureInjector.round_mask`` — so checkpoint-resumed
+  runs replay identical cohorts without snapshotting any RNG stream.
+  ``pick(version, candidates, count)`` is the async variant: at each
+  aggregation boundary the loop refills the in-flight set from the
+  currently idle clients, keyed by server version.  When the cohort is the
+  whole fleet, both degenerate bitwise to the legacy all-clients behavior
+  (``sorted(choice of all) == all``), which is what makes
+  ``cohort_size=K`` reproduce the pre-cohort loops exactly.
+
+* ``EFStore`` — host-side, NumPy-backed, zero-default storage of the EF
+  rows.  Only the active cohort's rows are ever materialized on device
+  (``fetch`` returns a ``(C, padded)`` jnp array); everything else lives in
+  a sparse dict of *touched* rows — a client that never survived a round
+  has an all-zero EF row that is never stored at all, so host memory grows
+  with participation, not registration.  ``prefetch`` stages the next
+  cohort's gather on a single worker thread so the host copy overlaps the
+  cohort's local training; ``fetch`` consumes the staged result when the
+  requested ids are covered by it (survivors are a subset of the
+  prefetched members) and degrades to a synchronous gather otherwise —
+  either way the returned rows are bitwise identical.  ``snapshot`` /
+  ``restore`` round-trip the touched rows as two flat arrays (ids + rows)
+  for the checkpoint layer.
+
+Memory contract (measured by benchmarks/hierarchy.py): device-resident EF
+is ``O(cohort_size * padded)`` and *independent of K*; the dense legacy
+array would be ``O(K * padded)``.
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CohortSampler", "EFStore"]
+
+
+class CohortSampler:
+    """Seeded per-round cohorts over a registered fleet of ``K`` clients.
+
+    Deterministic and stateless between calls: every draw is keyed on
+    ``(seed, index)``, so resuming a run at round ``r`` re-derives the
+    exact cohorts of rounds ``0..r-1`` (the loader fast-forward in
+    ``fl/loop.py`` depends on this) without any snapshot.
+    """
+
+    def __init__(self, num_clients: int, cohort_size: int, seed: int = 0):
+        if not 1 <= cohort_size <= num_clients:
+            raise ValueError(
+                f"cohort_size={cohort_size} outside [1, K={num_clients}]")
+        self.K = int(num_clients)
+        self.size = int(cohort_size)
+        self.seed = int(seed)
+
+    def _rng(self, index: int) -> np.random.RandomState:
+        # keyed per (seed, index) — same idiom as FailureInjector._round_rng
+        # but offset so cohort draws and failure masks never share a stream
+        return np.random.RandomState(
+            (self.seed * 1_000_003 + 7_919 * (index + 1)) % (2 ** 31))
+
+    def members(self, round_idx: int) -> np.ndarray:
+        """Sorted client ids of round ``round_idx``'s cohort — a pure
+        function of ``(seed, round_idx)``; sampling without replacement."""
+        rng = self._rng(int(round_idx))
+        return np.sort(rng.choice(self.K, self.size, replace=False))
+
+    def member_mask(self, round_idx: int) -> np.ndarray:
+        """Boolean ``(K,)`` mask of ``members(round_idx)``."""
+        mask = np.zeros(self.K, bool)
+        mask[self.members(round_idx)] = True
+        return mask
+
+    def pick(self, version: int, candidates: np.ndarray,
+             count: int) -> np.ndarray:
+        """Async refill: draw ``count`` sorted clients from ``candidates``
+        (the not-in-flight ids), keyed on the server ``version``.  When
+        every candidate must be taken (``count == len(candidates)`` — the
+        cohort-is-the-fleet case) this returns ``sorted(candidates)``,
+        which is exactly the legacy redispatch order."""
+        candidates = np.asarray(candidates)
+        if count > len(candidates):
+            raise ValueError(
+                f"cannot pick {count} clients from {len(candidates)} "
+                f"candidates")
+        rng = self._rng(int(version))
+        sel = rng.choice(len(candidates), count, replace=False)
+        return np.sort(candidates[sel])
+
+
+class EFStore:
+    """Host-side virtualized error-feedback rows, zero-default and sparse.
+
+    The loops see the same contract as the dense ``delta_errors`` array —
+    gather rows for the survivors, scatter the updated rows back — but only
+    touched rows occupy host memory and only the fetched cohort ever
+    becomes a device array.
+    """
+
+    def __init__(self, num_clients: int, padded: int):
+        self.K = int(num_clients)
+        self.padded = int(padded)
+        self._rows: Dict[int, np.ndarray] = {}
+        self._pool = ThreadPoolExecutor(max_workers=1)
+        self._staged_ids: Optional[Tuple[int, ...]] = None
+        self._future = None
+
+    # -- core host-side gather/scatter ------------------------------------
+    def _gather(self, ids: Tuple[int, ...]) -> np.ndarray:
+        out = np.zeros((len(ids), self.padded), np.float32)
+        for i, k in enumerate(ids):
+            row = self._rows.get(k)
+            if row is not None:
+                out[i] = row
+        return out
+
+    def prefetch(self, ids: Sequence[int]) -> None:
+        """Stage the gather of ``ids`` on the worker thread (overlapped with
+        local training).  A later ``fetch`` whose ids are covered by this
+        staging consumes it; an uncovered fetch falls back to a direct
+        gather — results are bitwise identical either way."""
+        self._drain()
+        self._staged_ids = tuple(int(k) for k in ids)
+        self._future = self._pool.submit(self._gather, self._staged_ids)
+
+    def _drain(self) -> Optional[np.ndarray]:
+        if self._future is None:
+            return None
+        staged = self._future.result()
+        self._future = None
+        return staged
+
+    def fetch(self, ids: Sequence[int]) -> jnp.ndarray:
+        """Device-resident ``(len(ids), padded)`` fp32 EF rows."""
+        ids = tuple(int(k) for k in ids)
+        staged_ids, staged = self._staged_ids, self._drain()
+        if staged is not None and staged_ids is not None:
+            if ids == staged_ids:
+                return jnp.asarray(staged)
+            pos = {k: i for i, k in enumerate(staged_ids)}
+            if all(k in pos for k in ids):
+                return jnp.asarray(staged[[pos[k] for k in ids]])
+        return jnp.asarray(self._gather(ids))
+
+    def store(self, ids: Sequence[int], rows) -> None:
+        """Write the updated EF rows back to host memory (one copy per
+        row; the device buffer may be donated/overwritten afterwards)."""
+        arr = np.asarray(rows, np.float32)
+        if arr.shape != (len(ids), self.padded):
+            raise ValueError(f"EF rows shape {arr.shape} != "
+                             f"({len(ids)}, {self.padded})")
+        for i, k in enumerate(ids):
+            self._rows[int(k)] = np.array(arr[i])
+
+    # -- checkpoint round-trip --------------------------------------------
+    def snapshot(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Touched rows as ``(ids (T,), rows (T, padded))``, sorted by id —
+        the checkpoint representation (variable ``T``, never ``K``)."""
+        ids = np.asarray(sorted(self._rows), np.int64)
+        rows = (np.stack([self._rows[int(k)] for k in ids])
+                if len(ids) else np.zeros((0, self.padded), np.float32))
+        return ids, rows.astype(np.float32)
+
+    def restore(self, ids: Sequence[int], rows) -> None:
+        arr = np.asarray(rows, np.float32)
+        self._staged_ids, self._future = None, None
+        self._rows = {int(k): np.array(arr[i]) for i, k in enumerate(ids)}
+
+    # -- accounting (benchmarks/hierarchy.py) ------------------------------
+    @property
+    def touched(self) -> int:
+        """Number of clients whose EF row has ever been written."""
+        return len(self._rows)
+
+    @property
+    def host_bytes(self) -> int:
+        """Host memory held by touched rows (zeros cost nothing)."""
+        return sum(r.nbytes for r in self._rows.values())
+
+    def dense_bytes(self) -> int:
+        """What the legacy dense ``(K, padded)`` fp32 array would cost —
+        the baseline the virtualized store is measured against."""
+        return self.K * self.padded * 4

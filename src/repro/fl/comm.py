@@ -20,6 +20,15 @@ one ``round_comm_time(delta up, model down)`` weight sync; see
 ``fl/loop.py`` and docs/API.md.  ``paper_schedule`` reproduces §V-D's
 5-slot throttling: from ``start_round`` each device in turn drops to
 ``low_bps`` for ``slot_len`` rounds (Jetson first, Pi3-2 last).
+
+Two-hop accounting (fl/hierarchy.py): under the two-tier server the
+client-side ``transport`` above models the client->edge hop, and a second
+optional ``edge_transport`` models the edge->root hop — one pre-reduced
+fp32 row up plus the model broadcast down per *edge* per aggregation,
+charged by ``RoundClock.edge_hop_times`` with the edge index as the
+``device`` argument (``indexed_bandwidths`` builds per-edge links).  No
+``edge_transport`` means a free root hop, which is what keeps
+single-tier configurations bitwise unchanged.
 """
 from __future__ import annotations
 
@@ -53,6 +62,14 @@ class Transport:
 
 def constant_bandwidth(bps: float) -> BandwidthFn:
     return lambda r, d: bps
+
+
+def indexed_bandwidths(bps) -> BandwidthFn:
+    """Constant per-index bandwidths from a plain sequence — the edge
+    uplinks of the two-tier server (index = edge id), or any fleet slice
+    without a ``DeviceProfile``."""
+    bps = [float(b) for b in bps]
+    return lambda r, d: bps[d]
 
 
 def device_bandwidths(devices) -> BandwidthFn:

@@ -207,25 +207,34 @@ class ServerStep:
             self._kmax = int(meta[:, 1].max())
         # donate the big (K, n) buffers (deltas, error rows) — they are
         # consumed by the step; skipped on CPU where donation is a no-op
-        donate = () if jax.default_backend() == "cpu" else (1, 3)
-        self._step = jax.jit(self._step_impl, donate_argnums=donate)
+        cpu = jax.default_backend() == "cpu"
+        self._step = jax.jit(self._step_impl,
+                             donate_argnums=() if cpu else (1, 3))
+        # reduce's signature drops the leading global: deltas/err shift left
+        self._reduce = jax.jit(self._reduce_core,
+                               donate_argnums=() if cpu else (0, 2))
+        self.reduce_calls = 0
 
-    def _step_impl(self, g: jnp.ndarray, deltas: jnp.ndarray,
-                   w: jnp.ndarray, err: Optional[jnp.ndarray],
-                   masks: Optional[jnp.ndarray] = None):
+    def _reduce_core(self, deltas: jnp.ndarray, w: jnp.ndarray,
+                     err: Optional[jnp.ndarray],
+                     masks: Optional[jnp.ndarray] = None):
+        """The weighted reduction shared by the flat step and the two-tier
+        edge tier: ``(acc, den, new_err)`` where ``acc`` is the weighted
+        (masked) sum of the sent rows, ``den`` the per-coordinate covered
+        weight (``None`` when unmasked), ``new_err`` the updated EF rows.
+        ``_step_impl`` is exactly reduce-then-apply, so the single-tier
+        program's graph is unchanged by the refactor."""
         block = self.layout.block
         if not self.track_errors and not self.quantize:
             if masks is None:
                 # plain weighted averaging: ONE (K,) @ (K, n) matvec
-                return g + w @ deltas, None
+                return w @ deltas, None, None
             # cross-width averaging (HeteroFL): per-coordinate coverage —
             # each coordinate averages over the clients whose width mask
             # covers it; uncovered coordinates keep the global bitwise.
-            # Still one dispatch: two matvecs and a guarded divide.
-            num = w @ (masks * deltas)
-            den = w @ masks
-            upd = jnp.where(den > 0, num, 0.0) / jnp.where(den > 0, den, 1.0)
-            return g + upd, None
+            # Still one dispatch: two matvecs (the guarded divide is the
+            # caller's apply step).
+            return w @ (masks * deltas), w @ masks, None
 
         # compression pipeline: stream client rows through a lax.scan so the
         # peak working set stays O(n) instead of O(K x n) — several (K, n)
@@ -272,10 +281,17 @@ class ServerStep:
         xs = (deltas, err, w) if self.track_errors else (deltas, w)
         if masks is not None:
             xs = xs + (masks,)
-        zero = jnp.zeros_like(g)
-        (upd, den), new_err = jax.lax.scan(one, (zero, zero), xs)
-        if masks is not None:
-            upd = jnp.where(den > 0, upd, 0.0) / jnp.where(den > 0, den, 1.0)
+        zero = jnp.zeros(deltas.shape[1:], deltas.dtype)
+        (acc, den), new_err = jax.lax.scan(one, (zero, zero), xs)
+        return acc, (den if masks is not None else None), new_err
+
+    def _step_impl(self, g: jnp.ndarray, deltas: jnp.ndarray,
+                   w: jnp.ndarray, err: Optional[jnp.ndarray],
+                   masks: Optional[jnp.ndarray] = None):
+        acc, den, new_err = self._reduce_core(deltas, w, err, masks)
+        if den is None:
+            return g + acc, new_err
+        upd = jnp.where(den > 0, acc, 0.0) / jnp.where(den > 0, den, 1.0)
         return g + upd, new_err
 
     def __call__(self, g_flat: jnp.ndarray, deltas: jnp.ndarray,
@@ -290,6 +306,22 @@ class ServerStep:
         w = jnp.asarray(_normalized_f64(weights), jnp.float32)
         self.calls += 1
         return self._step(g_flat, deltas, w, errors, masks)
+
+    def reduce(self, deltas: jnp.ndarray, weights: Sequence[float],
+               errors: Optional[jnp.ndarray] = None,
+               masks: Optional[jnp.ndarray] = None
+               ) -> Tuple[jnp.ndarray, Optional[jnp.ndarray],
+                          Optional[jnp.ndarray]]:
+        """The edge tier of the two-tier server (fl/hierarchy.py): the same
+        compression + weighted-reduce pipeline as ``__call__`` but *without*
+        the apply — returns ``(acc, den, new_err)`` where ``acc`` is one
+        pre-reduced flat row (weights normalized within this edge), ``den``
+        the per-coordinate covered weight under ``masks`` (else ``None``)
+        and ``new_err`` the member EF rows.  A ``RootStep`` combines the
+        per-edge rows; the root never sees per-client rows."""
+        w = jnp.asarray(_normalized_f64(weights), jnp.float32)
+        self.reduce_calls += 1
+        return self._reduce(deltas, w, errors, masks)
 
 
 _STEP_CACHE: Dict[tuple, ServerStep] = {}
@@ -307,6 +339,53 @@ def get_server_step(layout: FlatLayout, density: float = 1.0,
         _STEP_CACHE[key] = ServerStep(layout, density=density,
                                       quantize=quantize, interpret=interpret)
     return _STEP_CACHE[key]
+
+
+class RootStep:
+    """The root tier of the two-tier server: combine the per-edge
+    pre-reduced rows from ``ServerStep.reduce`` and apply to the flat
+    global.  Operands are ``(E, padded)`` — one row per edge, weighted by
+    each edge's share of the survivor weight mass — so the root's working
+    set is O(edges x n) regardless of cohort size.  With one edge the
+    normalized edge weight is exactly 1.0 and fp32 multiply-by-1.0 is
+    exact, which is what keeps single-edge mode bitwise equal to the flat
+    ``ServerStep`` (drilled in tests/test_hierarchy.py)."""
+
+    def __init__(self, layout: FlatLayout):
+        self.layout = layout
+        self.calls = 0
+        self._plain = jax.jit(lambda g, nums, w: g + w @ nums)
+        self._masked = jax.jit(self._masked_impl)
+
+    @staticmethod
+    def _masked_impl(g, nums, dens, w):
+        num = w @ nums
+        den = w @ dens
+        upd = jnp.where(den > 0, num, 0.0) / jnp.where(den > 0, den, 1.0)
+        return g + upd
+
+    def __call__(self, g_flat: jnp.ndarray, nums: jnp.ndarray,
+                 weights: Sequence[float],
+                 dens: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+        """``nums``/``dens`` are stacked per-edge rows; ``weights`` the raw
+        per-edge survivor weight masses (normalized here, mirroring
+        ``ServerStep.__call__``)."""
+        w = jnp.asarray(_normalized_f64(weights), jnp.float32)
+        self.calls += 1
+        if dens is None:
+            return self._plain(g_flat, nums, w)
+        return self._masked(g_flat, nums, dens, w)
+
+
+_ROOT_CACHE: Dict[FlatLayout, RootStep] = {}
+
+
+def get_root_step(layout: FlatLayout) -> RootStep:
+    """Cached RootStep per layout (per-``E`` executables live in the jit
+    cache, same as ``get_server_step``'s per-``K`` caching)."""
+    if layout not in _ROOT_CACHE:
+        _ROOT_CACHE[layout] = RootStep(layout)
+    return _ROOT_CACHE[layout]
 
 
 # =============================================================================

@@ -1,0 +1,140 @@
+"""Two-tier hierarchical aggregation: edge aggregators + one root.
+
+The flat server (``fl/flatbuf.ServerStep``) stacks every survivor's delta
+row on one device and reduces in a single program — O(cohort x n) operands
+at the server.  Past a few thousand concurrent reporters that single
+reduction point is the bottleneck, which is why every IoT-FL architecture
+at fleet scale (the coordinator/proxy/cloud tiering in aws-samples'
+Greengrass FL reference, the hierarchical aggregation both surveys in
+PAPERS.md converge on) splits aggregation into two tiers:
+
+* **edge tier** — each ``EdgeAggregator`` owns a contiguous slice of the
+  survivor set and runs ``ServerStep.reduce``: the full compression
+  pipeline (EF carry, block top-k, int8 wire format) plus the weighted
+  reduction, but *no apply*.  Its product is one pre-reduced flat row (+
+  per-coordinate coverage row under width masks, + its members' updated EF
+  rows) and a scalar weight — the edge's share of the survivor weight
+  mass.
+
+* **root tier** — ``flatbuf.RootStep`` combines the ``(E, padded)`` edge
+  rows and applies to the flat global.  The root never materializes a
+  per-client row: its working set is O(edges x n) no matter how large the
+  cohort.
+
+Equivalence: within an edge, weights are normalized by the edge's mass
+``W_e``; the root weighs edge ``e`` by ``W_e / sum(W)``.  The product
+recovers each client's global normalized weight, so tiered aggregation
+matches the flat step up to fp32 summation order.  With ONE edge there is
+no cross-edge combine at all, so ``hierarchical_apply`` runs the edge as
+the degenerate tier: the fused reduce+apply program itself
+(``ServerStep.__call__``) — ``num_edges=1`` is therefore bitwise identical
+to the flat step *by construction*, for every compression mode (drilled in
+tests/test_hierarchy.py).  (Splitting reduce from apply is NOT bitwise for
+the plain path — XLA fuses ``g + w @ deltas`` into one accumulation — so
+the split programs are reserved for the >= 2-edge case they exist for.)
+
+``hierarchical_apply`` is the orchestration both loops share; the returned
+EF rows are re-ordered back to the caller's survivor order so the dense
+``delta_errors`` scatter and the ``EFStore.store`` path are oblivious to
+the edge partition.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.flatbuf import RootStep, ServerStep
+
+__all__ = ["EdgeAggregator", "EdgeUpdate", "assign_edges",
+           "hierarchical_apply"]
+
+
+def assign_edges(count: int, num_edges: int) -> List[np.ndarray]:
+    """Deterministic balanced partition of ``count`` survivor positions
+    across ``min(num_edges, count)`` edges: contiguous slices in survivor
+    (client-id) order, sizes differing by at most one.  Contiguity keeps
+    each edge's in-scan accumulation order a sub-order of the flat step's,
+    and ``num_edges=1`` yields the identity partition."""
+    if count <= 0:
+        return []
+    if num_edges < 1:
+        raise ValueError(f"num_edges={num_edges} must be >= 1")
+    return list(np.array_split(np.arange(count), min(num_edges, count)))
+
+
+@dataclasses.dataclass
+class EdgeUpdate:
+    """One edge's pre-reduced product, in flight to the root."""
+    num: jnp.ndarray                 # (padded,) weighted sum of sent rows
+    den: Optional[jnp.ndarray]       # (padded,) covered weight (masked only)
+    new_err: Optional[jnp.ndarray]   # (members, padded) updated EF rows
+    weight: float                    # this edge's survivor weight mass W_e
+    members: int                     # survivor count behind this edge
+
+
+class EdgeAggregator:
+    """One edge server: wraps the shared fused ``ServerStep`` in reduce-only
+    mode over its slice of the survivors.  Stateless between rounds — the
+    EF rows flow through it, they do not live on it — so edges can be
+    re-provisioned freely as the cohort changes."""
+
+    def __init__(self, edge_id: int, step: ServerStep):
+        self.edge_id = int(edge_id)
+        self.step = step
+
+    def aggregate(self, deltas: jnp.ndarray, weights: Sequence[float],
+                  errors: Optional[jnp.ndarray] = None,
+                  masks: Optional[jnp.ndarray] = None) -> EdgeUpdate:
+        acc, den, new_err = self.step.reduce(deltas, weights, errors, masks)
+        return EdgeUpdate(num=acc, den=den, new_err=new_err,
+                          weight=float(np.asarray(weights,
+                                                  np.float64).sum()),
+                          members=int(deltas.shape[0]))
+
+
+def hierarchical_apply(
+    step: ServerStep,
+    root: RootStep,
+    g_flat: jnp.ndarray,
+    deltas: jnp.ndarray,
+    weights: Sequence[float],
+    errors: Optional[jnp.ndarray] = None,
+    masks: Optional[jnp.ndarray] = None,
+    num_edges: int = 1,
+) -> Tuple[jnp.ndarray, Optional[jnp.ndarray], int]:
+    """Run one two-tier aggregation: partition the survivors across edges,
+    reduce each edge (``ServerStep.reduce``), combine + apply at the root.
+
+    Returns ``(new_g_flat, new_err, edges_used)`` with ``new_err`` in the
+    caller's original survivor order (``None`` when the step does not track
+    errors), so callers scatter it exactly as they would the flat step's.
+    """
+    parts = assign_edges(int(deltas.shape[0]), num_edges)
+    if len(parts) == 1:
+        # degenerate hierarchy: one edge reduces AND applies through the
+        # flat fused program — bitwise equal to the single-tier server
+        new_g, new_err = step(g_flat, deltas, weights, errors, masks=masks)
+        return new_g, new_err, 1
+    updates = []
+    for e, pos in enumerate(parts):
+        idx = jnp.asarray(pos.astype(np.int32))
+        upd = EdgeAggregator(e, step).aggregate(
+            deltas[idx], [weights[i] for i in pos],
+            errors[idx] if errors is not None else None,
+            masks[idx] if masks is not None else None)
+        updates.append(upd)
+    nums = jnp.stack([u.num for u in updates])
+    dens = (jnp.stack([u.den for u in updates])
+            if updates[0].den is not None else None)
+    new_g = root(g_flat, nums, [u.weight for u in updates], dens)
+    new_err = None
+    if updates[0].new_err is not None:
+        cat = jnp.concatenate([u.new_err for u in updates])
+        order = np.concatenate(parts)
+        inv = np.empty(len(order), np.int64)
+        inv[order] = np.arange(len(order))
+        new_err = cat[jnp.asarray(inv)]
+    return new_g, new_err, len(parts)

@@ -33,6 +33,16 @@ dispatches instead of the reference per-leaf tree_map path's O(K x leaves).
 tests and benchmarks; the two agree to fp32 tolerance (the fused weighted
 reduction is a single matvec, so client summation order differs).
 
+Fleet scale is opt-in per config: ``FLConfig.cohort_size`` samples a seeded
+per-round cohort from the registered fleet (fl/cohort.py) — only the
+cohort trains, only its error-feedback rows are device-resident (the rest
+virtualized in a host-side ``EFStore`` with prefetch overlapped with local
+training) — and ``FLConfig.num_edges`` splits aggregation into a two-tier
+edge/root server (fl/hierarchy.py) where the root only ever sees one
+pre-reduced row per edge.  ``cohort_size=K`` with one edge reproduces the
+flat full-participation loop bitwise; ``benchmarks/hierarchy.py`` drives a
+simulated million-client fleet through these paths.
+
 Fault tolerance is first-class: deadline straggler drops, failure injection,
 atomic checkpoints with bitwise resume (params plus the run's aux state:
 top-k error feedback, controller normalizer, failure-RNG position), and
@@ -57,10 +67,17 @@ from repro.checkpoint import CheckpointManager
 from repro.core.controller import FedAdaptController
 from repro.core.env import SimulatedCluster
 from repro.data.loader import FleetLoader
+from repro.fl.cohort import CohortSampler, EFStore
 from repro.fl.fedavg import fedavg_delta_stacked, model_bytes
 from repro.fl.comm import Transport
-from repro.fl.flatbuf import get_server_step, reference_server_step
+from repro.fl.flatbuf import (
+    get_root_step,
+    get_server_step,
+    reference_server_step,
+)
 from repro.fl.fleet import StackedRows, get_engine, rows_as_list, take_rows
+from repro.fl.hierarchy import hierarchical_apply
+from repro.fl.state import base_state_tree, ef_template_len
 from repro.fl.planner import FedAdaptPlanner, Planner, StaticPlanner
 from repro.models.split_program import get_split_program
 from repro.runtime.failures import FailureInjector
@@ -99,6 +116,20 @@ class FLConfig:
                                      # per-coordinate coverage counts; None
                                      # keeps every client full-width (the
                                      # homogeneous paths stay bitwise)
+    cohort_size: int = 0             # >0: every round trains a seeded
+                                     # cohort of this many clients sampled
+                                     # from the registered fleet
+                                     # (fl/cohort.py); EF state for the
+                                     # rest is virtualized host-side in an
+                                     # EFStore.  0 keeps legacy
+                                     # full-fleet participation;
+                                     # cohort_size=K matches it bitwise
+    num_edges: int = 0               # >0: two-tier edge/root aggregation
+                                     # (fl/hierarchy.py; fused server_step
+                                     # only) — edges pre-reduce, the root
+                                     # never sees per-client rows.
+                                     # num_edges=1 is bitwise the flat
+                                     # server; 0 keeps the single tier
     # --- async runtime knobs (fl/async_loop.run_federated_async) ----------
     buffer_size: int = 0             # aggregate once this many client
                                      # updates arrive; 0 -> K (and with
@@ -147,25 +178,6 @@ def _delta_trees(params, client_params: List) -> List:
         cp, params) for cp in client_params]
 
 
-def _ckpt_tree(params, delta_errors, track_errors: bool, ctl, K: int,
-               template: bool = False):
-    """The full checkpoint state: params plus whatever per-run aux state the
-    config implies (top-k error feedback, controller normalizer).  Resuming
-    from params alone silently diverges whenever ``delta_density < 1`` or a
-    FedAdapt controller is driving — the aux state is part of the run."""
-    tree = {"params": params}
-    if track_errors:
-        tree["delta_errors"] = delta_errors
-    if ctl is not None:
-        tree["controller"] = {
-            "baselines": (np.zeros(K, np.float64) if template
-                          else np.asarray(ctl.baselines, np.float64)),
-            "prev_actions": (np.zeros(ctl.G, np.float32) if template
-                             else np.asarray(ctl.prev_actions, np.float32)),
-        }
-    return tree
-
-
 class RoundClock:
     """Per-device round-time accounting shared by the synchronous loop and
     the async runtime (fl/async_loop.py).
@@ -182,13 +194,15 @@ class RoundClock:
     def __init__(self, program, fl: FLConfig, K: int, seq: Optional[int],
                  params, sim: Optional[SimulatedCluster] = None,
                  transport: Optional[Transport] = None,
-                 compute_scale: Optional[np.ndarray] = None):
+                 compute_scale: Optional[np.ndarray] = None,
+                 edge_transport: Optional[Transport] = None):
         self.program = program
         self.fl = fl
         self.K = K
         self.seq = seq
         self.sim = sim
         self.transport = transport
+        self.edge_transport = edge_transport
         self.native_op = program.native_op
         self.model_bytes = float(model_bytes(params))  # sizes are static
         # per-client compute multiplier (HeteroFL width**2, fl/hetero.py);
@@ -223,6 +237,21 @@ class RoundClock:
             out.append(t)
         return np.asarray(out)
 
+    def edge_hop_times(self, num_edges: int, round_idx: int) -> np.ndarray:
+        """Per-edge edge->root comm time for one aggregation under the
+        two-tier server: the edge's pre-reduced fp32 row up (model-sized —
+        edge rows are dense; top-k/int8 compression lives on the
+        client->edge hop) plus the model broadcast back down, through
+        ``edge_transport`` with the edge index as the link id.  Empty/zero
+        without an ``edge_transport`` — the free-root-hop default that
+        keeps single-tier configurations bitwise unchanged."""
+        if self.edge_transport is None or num_edges <= 0:
+            return np.zeros(max(int(num_edges), 0))
+        return np.asarray([
+            self.edge_transport.round_comm_time(
+                self.model_bytes, self.model_bytes, round_idx, e)
+            for e in range(int(num_edges))])
+
     def times(self, ops: List[int], round_idx: int):
         """(total per-device round times, comm component)."""
         scale = self.compute_scale
@@ -256,13 +285,16 @@ def run_federated(
     resume: bool = False,
     planner: Optional[Planner] = None,
     transport: Optional[Transport] = None,
+    edge_transport: Optional[Transport] = None,
 ) -> Dict[str, np.ndarray]:
     """Train any registered config federated with per-round offloading.
 
     ``cfg`` is a ``VGGConfig`` or any ``ModelConfig`` family with a
     registered ``SplitProgram``.  Returns history: per-round eval metric
     (``accuracy``: classification accuracy for VGG, -CE loss for LMs),
-    round/comm times, per-device OPs, drop counts.
+    round/comm times, per-device OPs, drop counts, and — under the
+    two-tier server — the per-round edge->root hop time (``edge_time``,
+    charged through ``edge_transport`` and added to ``round_time``).
     """
     program = get_split_program(cfg)
     K = len(clients_data)
@@ -281,8 +313,28 @@ def run_federated(
     seq = (clients_data[0]["tokens"].shape[1]
            if "tokens" in clients_data[0] else None)
     sizes = np.asarray([len(d["labels"]) for d in clients_data], np.float64)
+    if not 0 <= fl.cohort_size <= K:
+        raise ValueError(f"cohort_size={fl.cohort_size} outside [0, K={K}]")
+    if fl.num_edges < 0:
+        raise ValueError(f"num_edges={fl.num_edges} must be >= 0")
+    if fl.num_edges > 0 and not fused:
+        raise ValueError(
+            "hierarchical aggregation (num_edges > 0) runs through the "
+            "fused flat-buffer server step; server_step='reference' is the "
+            "per-client oracle it is tested against, not a tiered path")
+    cohort = (CohortSampler(K, fl.cohort_size, seed=fl.seed)
+              if fl.cohort_size > 0 else None)
     track_errors = fl.delta_density < 1.0
-    delta_errors = _zero_errors(K, layout) if track_errors else None
+    # EF representation: dense (K, padded) device array for the legacy
+    # full-fleet loop; host-side virtualized EFStore once a cohort caps the
+    # device-resident working set at O(cohort_size x padded)
+    if not track_errors:
+        delta_errors = None
+    elif cohort is not None:
+        delta_errors = EFStore(K, layout.padded)
+    else:
+        delta_errors = _zero_errors(K, layout)
+    virtualized = isinstance(delta_errors, EFStore)
     from repro.fl.hetero import resolve_hetero
     hetero = resolve_hetero(fl, program, params, layout)
     if hetero is not None and len(hetero) != K:
@@ -296,44 +348,62 @@ def run_federated(
     if fl.checkpoint_dir:
         mgr = CheckpointManager(fl.checkpoint_dir)
         if resume:
-            restored, step = mgr.restore_latest(
-                _ckpt_tree(params, delta_errors, track_errors, ctl, K,
-                           template=True))
-            if restored is not None:
+            # peek the stored shapes first: the virtualized EF snapshot is
+            # sparse (ef/ids + ef/rows with a data-dependent touched count),
+            # so the strict restore template is sized off the file
+            shapes = mgr.latest_shapes()
+            if shapes is not None:
+                restored, ck_step = mgr.restore_latest(
+                    base_state_tree(params, delta_errors, ctl, K,
+                                    template=True,
+                                    ef_len=ef_template_len(shapes)))
                 params = restored["params"]
                 if track_errors:
-                    delta_errors = jnp.asarray(restored["delta_errors"],
-                                               jnp.float32)
+                    if virtualized:
+                        delta_errors.restore(
+                            np.asarray(restored["ef"]["ids"], np.int64),
+                            restored["ef"]["rows"])
+                    else:
+                        delta_errors = jnp.asarray(
+                            restored["delta_errors"], jnp.float32)
                 if ctl is not None:
                     ctl.baselines = np.asarray(
                         restored["controller"]["baselines"], np.float64)
                     ctl.prev_actions = np.asarray(
                         restored["controller"]["prev_actions"], np.float32)
-                start_round = int(step)
+                start_round = int(ck_step)
                 # fast-forward the deterministic loaders so a resumed run
                 # sees the exact batches of an uninterrupted one (bitwise
                 # resume — tests/test_runtime.py, tests/test_async.py).
-                # Only rounds a client was ALIVE drew from its stream, and
-                # the failure masks are keyed by round index (a pure
-                # function of the seed), so the exact per-client
-                # consumption replays without any stored state
+                # Only rounds a client was ALIVE *and in the cohort* drew
+                # from its stream, and both the failure masks and the
+                # cohort draws are keyed by round index (pure functions of
+                # the seed), so the exact per-client consumption replays
+                # without any stored state — untouched clients stay
+                # unmaterialized in the lazy FleetLoader
                 alive_rounds = np.zeros(K, np.int64)
                 for rr in range(start_round):
-                    alive_rounds += injector.round_mask(K, round_idx=rr)
-                for k, ld in enumerate(loaders.loaders):
-                    ld.skip(int(alive_rounds[k]) * fl.local_iters)
+                    m = injector.round_mask(K, round_idx=rr)
+                    if cohort is not None:
+                        m = m & cohort.member_mask(rr)
+                    alive_rounds += m
+                for k in np.flatnonzero(alive_rounds):
+                    loaders.skip_client(int(k),
+                                        int(alive_rounds[k]) * fl.local_iters)
 
     # --- round time accounting -------------------------------------------
     clock = RoundClock(program, fl, K, seq, params, sim=sim,
                        transport=transport,
                        compute_scale=(hetero.compute_scale
-                                      if hetero is not None else None))
+                                      if hetero is not None else None),
+                       edge_transport=edge_transport)
 
     # --- server step: one compiled flat-buffer program per round ----------
     # (fl/flatbuf.py; cached per layout/density/quantize, reused across
     # rounds and shared with the async runtime)
     step = get_server_step(layout, fl.delta_density, fl.quantize_deltas) \
         if fused else None
+    root = get_root_step(layout) if fused and fl.num_edges > 0 else None
     g_flat = layout.flatten(params) if fused else None
 
     # round-0 baselines (classic FL, no offloading)
@@ -344,7 +414,8 @@ def run_federated(
     plan.begin(times)
 
     hist: Dict[str, list] = {"accuracy": [], "round_time": [], "ops": [],
-                             "times": [], "comm_time": [], "dropped": []}
+                             "times": [], "comm_time": [], "dropped": [],
+                             "edge_time": []}
     eval_fn = jax.jit(lambda p, b: program.eval_metric(p, b))
     test_batch = {k: jnp.asarray(v) for k, v in test_data.items()}
 
@@ -355,6 +426,16 @@ def run_federated(
         ops = plan.plan(r, times, bandwidths)
         # --- local training (fleet engine) ----------------------------------
         alive = injector.round_mask(K, round_idx=r)
+        if cohort is not None:
+            # only this round's seeded cohort participates; everyone else
+            # counts as dropped for this round's accounting
+            alive &= cohort.member_mask(r)
+            if virtualized:
+                # stage the live cohort's EF rows on the store's worker
+                # thread — the host-side gather overlaps the cohort's local
+                # training, and the post-training fetch (survivors are a
+                # subset of the live cohort) consumes the staged rows
+                delta_errors.prefetch(np.flatnonzero(alive))
         idxs, rows = engine.run_round(params, loaders, ops,
                                       [int(k) for k in np.flatnonzero(alive)],
                                       r, lr, hetero=hetero)
@@ -368,20 +449,36 @@ def run_federated(
         kept_pos = [i for i, k in enumerate(idxs) if keep[k]]
         surv_idx = [idxs[i] for i in kept_pos]
         surv_w = [weights[k] for k in surv_idx]
+        edges_used = 0
         if kept_pos:
             mask_rows = hetero.rows(surv_idx) if hetero is not None else None
             if fused:
                 # fused flat-buffer server step: stack survivor deltas,
                 # top-k error feedback, optional int8, weighted apply — all
-                # one compiled dispatch (plus one stack, one unflatten)
+                # one compiled dispatch (plus one stack, one unflatten);
+                # with num_edges > 0 the same pipeline runs tiered
+                # (fl/hierarchy.py: per-edge reduce, root apply)
                 deltas = layout.rows_to_deltas(take_rows(rows, kept_pos),
                                                g_flat)
                 ids = jnp.asarray(np.asarray(surv_idx, np.int32))
-                err_rows = delta_errors[ids] if track_errors else None
-                g_flat, new_err = step(g_flat, deltas, surv_w, err_rows,
-                                       masks=mask_rows)
+                if not track_errors:
+                    err_rows = None
+                elif virtualized:
+                    err_rows = delta_errors.fetch(surv_idx)
+                else:
+                    err_rows = delta_errors[ids]
+                if fl.num_edges > 0:
+                    g_flat, new_err, edges_used = hierarchical_apply(
+                        step, root, g_flat, deltas, surv_w, err_rows,
+                        mask_rows, num_edges=fl.num_edges)
+                else:
+                    g_flat, new_err = step(g_flat, deltas, surv_w, err_rows,
+                                           masks=mask_rows)
                 if track_errors:
-                    delta_errors = delta_errors.at[ids].set(new_err)
+                    if virtualized:
+                        delta_errors.store(surv_idx, new_err)
+                    else:
+                        delta_errors = delta_errors.at[ids].set(new_err)
                 params = layout.unflatten(g_flat)
                 if not layout.exact_fp32:
                     # narrower param dtypes round on unflatten: re-derive
@@ -402,14 +499,22 @@ def run_federated(
                 # reference per-leaf path (O(K x leaves) dispatches): the
                 # equivalence baseline for tests and benchmarks
                 ids = jnp.asarray(np.asarray(surv_idx, np.int32))
-                err_rows = delta_errors[ids] if track_errors else None
+                if not track_errors:
+                    err_rows = None
+                elif virtualized:
+                    err_rows = delta_errors.fetch(surv_idx)
+                else:
+                    err_rows = delta_errors[ids]
                 params, new_err = reference_server_step(
                     layout, params, _delta_trees(
                         params, rows_as_list(rows, kept_pos)),
                     surv_w, err_rows, density=fl.delta_density,
                     quantize=fl.quantize_deltas, masks=mask_rows)
                 if track_errors:
-                    delta_errors = delta_errors.at[ids].set(new_err)
+                    if virtualized:
+                        delta_errors.store(surv_idx, new_err)
+                    else:
+                        delta_errors = delta_errors.at[ids].set(new_err)
         plan.feedback(times)
         # --- evaluation + checkpoint ----------------------------------------
         acc = float(eval_fn(params, test_batch))
@@ -423,15 +528,22 @@ def run_federated(
         else:
             finite = times[np.isfinite(times)]
             wall = float(finite.max()) if finite.size else 0.0
+        # edge->root hop of the two-tier server: the slowest active edge
+        # extends the round (0.0 without an edge_transport, which keeps
+        # flat configurations bitwise unchanged)
+        edge_wall = 0.0
+        if edges_used and edge_transport is not None:
+            edge_wall = float(np.max(clock.edge_hop_times(edges_used, r)))
+            wall += edge_wall
         hist["round_time"].append(wall)
+        hist["edge_time"].append(edge_wall)
         hist["ops"].append(list(ops))
         hist["times"].append(times.copy())
         hist["comm_time"].append(comm.copy())
         hist["dropped"].append(int(K - keep.sum()))
         if mgr is not None and fl.checkpoint_every and \
                 (r + 1) % fl.checkpoint_every == 0:
-            mgr.save(_ckpt_tree(params, delta_errors, track_errors, ctl, K),
-                     r + 1)
+            mgr.save(base_state_tree(params, delta_errors, ctl, K), r + 1)
 
     hist_np = {k: np.asarray(v) for k, v in hist.items()}
     hist_np["params"] = params

@@ -1,0 +1,130 @@
+"""Checkpoint-state assembly shared by the sync and async loops.
+
+Historically ``fl/loop.py`` (``_ckpt_tree``) and ``fl/async_loop.py``
+(``_async_ckpt_template`` + an inline mirror in ``save_checkpoint``) each
+assembled near-identical checkpoint trees; this module is the single
+source of truth for both, and the one place the virtualized EF snapshot
+lands.
+
+Three error-state representations flow through ``base_state_tree``:
+
+* ``None`` — the run tracks no error feedback (``delta_density == 1``);
+* a dense ``(K, padded)`` array — the legacy full-fleet representation,
+  stored under the same ``delta_errors`` leaf as always (old checkpoints
+  keep restoring);
+* an ``fl.cohort.EFStore`` — the virtualized representation, stored
+  *sparse* as two leaves ``ef/ids (T,)`` + ``ef/rows (T, padded)`` where
+  ``T`` is the touched-row count, never ``K``.  Because ``T`` varies,
+  templates for restore are built against the shapes of the checkpoint on
+  disk (``CheckpointManager.latest_shapes``) — see the resume paths in
+  both loops.
+
+The cohort RNG needs no snapshot: ``CohortSampler`` draws are pure
+functions of ``(seed, round | version)``, the same design that keeps
+``FailureInjector`` masks replayable.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fl.cohort import EFStore
+
+__all__ = ["base_state_tree", "async_state_tree", "ef_template_len"]
+
+
+def ef_template_len(shapes: Optional[dict]) -> int:
+    """Touched-row count of the ``ef/ids`` leaf in a checkpoint's shape
+    map (``CheckpointManager.latest_shapes``); 0 when absent."""
+    if shapes and "ef/ids" in shapes:
+        return int(shapes["ef/ids"][0])
+    return 0
+
+
+def base_state_tree(params, errors, ctl, K: int, *, template: bool = False,
+                    ef_len: int = 0):
+    """The sync checkpoint tree: params + whatever aux state the config
+    implies (error feedback in either representation, controller
+    normalizer).  Resuming from params alone silently diverges whenever
+    ``delta_density < 1`` or a FedAdapt controller is driving — the aux
+    state is part of the run."""
+    tree = {"params": params}
+    if isinstance(errors, EFStore):
+        if template:
+            tree["ef"] = {
+                "ids": np.zeros(int(ef_len), np.int64),
+                "rows": np.zeros((int(ef_len), errors.padded), np.float32),
+            }
+        else:
+            ids, rows = errors.snapshot()
+            tree["ef"] = {"ids": ids, "rows": rows}
+    elif errors is not None:
+        tree["delta_errors"] = errors
+    if ctl is not None:
+        tree["controller"] = {
+            "baselines": (np.zeros(K, np.float64) if template
+                          else np.asarray(ctl.baselines, np.float64)),
+            "prev_actions": (np.zeros(ctl.G, np.float32) if template
+                             else np.asarray(ctl.prev_actions, np.float32)),
+        }
+    return tree
+
+
+def async_state_tree(params, errors, ctl, K: int, C: int, layout, *,
+                     template: bool = False, ef_len: int = 0,
+                     clock: Optional[Sequence[float]] = None,
+                     times: Optional[np.ndarray] = None,
+                     comm: Optional[np.ndarray] = None,
+                     ops: Optional[Sequence[int]] = None,
+                     loader_state: Optional[Sequence[Tuple[int, int]]] = None,
+                     events: Optional[Sequence[Tuple[float, Any,
+                                                     jnp.ndarray]]] = None):
+    """The async checkpoint tree: the sync tree plus the scheduler table.
+
+    At an aggregation boundary exactly ``C`` (the in-flight cohort size;
+    ``K`` without cohorting) report events are in flight — the fixed-shape
+    invariant — so the whole scheduler state is ``C`` timestamped rows
+    (``inf`` legal for dead links) with their deltas as flat layout rows.
+    ``events`` is the boundary snapshot in pop order: ``(t, report,
+    flat_row)`` triples from ``EventQueue.snapshot()``.
+    """
+    tree = base_state_tree(params, errors, ctl, K, template=template,
+                           ef_len=ef_len)
+    if template:
+        tree["async"] = {
+            "clock": np.zeros(2, np.float64),   # [now, last_agg_clock]
+            "times": np.zeros(K, np.float64),
+            "comm": np.zeros(K, np.float64),
+            "ops": np.zeros(K, np.int32),
+            "loader_state": np.zeros((K, 2), np.int64),
+            "ev_t": np.zeros(C, np.float64),
+            "ev_client": np.zeros(C, np.int32),
+            "ev_version": np.zeros(C, np.int32),
+            "ev_op": np.zeros(C, np.int32),
+            "ev_dur": np.zeros(C, np.float64),
+            "ev_comm": np.zeros(C, np.float64),
+            "ev_delta": np.zeros((C, layout.padded), np.float32),
+        }
+        return tree
+    if len(events) != C:
+        raise AssertionError(
+            f"checkpoint off an aggregation boundary: {len(events)} "
+            f"in-flight events, expected {C}")
+    tree["async"] = {
+        "clock": np.asarray(clock, np.float64),
+        "times": np.asarray(times, np.float64),
+        "comm": np.asarray(comm, np.float64),
+        "ops": np.asarray(ops, np.int32),
+        "loader_state": np.asarray(loader_state, np.int64),
+        "ev_t": np.asarray([t for t, _, _ in events], np.float64),
+        "ev_client": np.asarray([r.client for _, r, _ in events], np.int32),
+        "ev_version": np.asarray([r.version for _, r, _ in events],
+                                 np.int32),
+        "ev_op": np.asarray([r.op for _, r, _ in events], np.int32),
+        "ev_dur": np.asarray([r.time for _, r, _ in events], np.float64),
+        "ev_comm": np.asarray([r.comm for _, r, _ in events], np.float64),
+        "ev_delta": jnp.stack([row for _, _, row in events]),
+    }
+    return tree

@@ -67,6 +67,14 @@ class EventQueue:
         self.now = max(self.now, t)
         return t, payload
 
+    def snapshot(self) -> List[Tuple[float, int, Any]]:
+        """Every pending event as ``(time, seq, payload)`` in pop order —
+        the checkpoint view of the scheduler (fl/async_loop.py snapshots
+        the in-flight report table through this instead of reaching into
+        the heap).  Re-pushing the payloads in this order reproduces the
+        original FIFO tie-breaking."""
+        return sorted(self._heap)
+
     def drop_unreachable(self) -> List[Any]:
         """Remove every event scheduled at ``t=inf`` and return their
         payloads in push order.

@@ -1,6 +1,8 @@
 """Chaos drills: scripted churn (flapping links, mass leave/join waves,
 straggler storms) against the async virtual-clock runtime, with invariant
 checks, bitwise determinism regressions, and mid-drill checkpoint resume."""
+import copy
+
 import numpy as np
 import pytest
 
@@ -205,7 +207,9 @@ def test_async_checkpoint_requires_exact_layout(monkeypatch, tmp_path):
     orig = VGGSplitProgram.flat_layout
 
     def lossy(self, params):
-        layout = orig(self, params)
+        # copy before poisoning: layout_of caches per structure, so mutating
+        # the shared instance would leak exact_fp32=False into later tests
+        layout = copy.copy(orig(self, params))
         layout.exact_fp32 = False
         return layout
 
