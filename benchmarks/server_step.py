@@ -7,7 +7,13 @@ ServerStep + unflatten = 3), where the reference per-leaf tree_map path
 issues O(K x leaves) jnp ops.  This bench measures steady-state
 aggregation wall-clock for K in {4, 16, 64, 256} over two scenarios
 (plain weighted averaging; top-k error feedback + int8 wire format) and
-emits machine-readable ``BENCH_server_step.json``.
+emits machine-readable ``BENCH_server_step.json``.  Each cell also grows
+a ``mesh`` column: the same fused round timed on 1 vs 8 (forced host)
+devices via ``ShardedFlatLayout``/``ShardedServerStep`` over
+``make_flat_mesh((1, 8))``, with per-cell sharded-vs-reference
+equivalence flags (``sharded_bitwise`` / ``sharded_allclose``) — the
+column is produced by a ``--mesh-child`` subprocess because the host
+device count is fixed at jax import.
 
     PYTHONPATH=src python -m benchmarks.server_step           # full sweep
     PYTHONPATH=src python -m benchmarks.server_step --smoke   # CI: K=4 only
@@ -24,6 +30,9 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
+import subprocess
+import sys
 import time
 from typing import Dict, List
 
@@ -44,6 +53,11 @@ SCENARIOS = {
     "avg": dict(density=1.0, quantize=False),
     "topk_int8": dict(density=0.01, quantize=True),
 }
+# the mesh column: every cell is re-timed 1-device vs MESH_DEVICES-device
+# (ShardedServerStep over make_flat_mesh((1, MESH_DEVICES))) in a child
+# process that forces that many host devices -- the device count is fixed
+# at jax import, so the parent cannot flip it per column.
+MESH_DEVICES = 8
 
 
 def _client_rows(program, params, K: int) -> List:
@@ -102,14 +116,109 @@ def bench_cell(program, params, K: int, density: float, quantize: bool,
     }
 
 
+def _bench_models(smoke: bool):
+    models = [("vgg5", VGG5)]
+    if not smoke:
+        models.append(("llama3-8b-smoke", get_smoke_config("llama3-8b")))
+    return models
+
+
+def mesh_cell(program, params, K: int, density: float, quantize: bool,
+              reps: int) -> Dict:
+    """One (model, K, scenario) cell timed 1-device vs MESH_DEVICES-device,
+    with sharded-vs-reference equivalence flags.  Must run in a process
+    with >= MESH_DEVICES host devices (the --mesh-child mode)."""
+    from repro.parallel.sharding import make_flat_mesh
+    base = program.flat_layout(params)
+    lay = program.flat_layout(params,
+                              mesh=make_flat_mesh((1, MESH_DEVICES)))
+    rows = _client_rows(program, params, K)
+    weights = list(np.arange(1, K + 1, dtype=np.float64))
+    track = density < 1.0
+    step1 = get_server_step(base, density, quantize)
+    step8 = get_server_step(lay, density, quantize)
+    g1 = base.flatten(params)
+    g8 = lay.flatten(params)
+
+    def round_on(layout, g, step):
+        err = (jnp.zeros((K, layout.padded), jnp.float32) if track else None)
+
+        def fn():
+            deltas = layout.rows_to_deltas(rows, g)
+            return step(g, deltas, weights, err)
+        return fn
+
+    one = round_on(base, g1, step1)
+    eight = round_on(lay, g8, step8)
+    ms1 = _time(lambda: one()[0], reps)
+    ms8 = _time(lambda: eight()[0], reps)
+    ref_g = np.asarray(one()[0])
+    new_g = np.asarray(eight()[0])[:base.padded]
+    return {
+        "devices": MESH_DEVICES,
+        "fused_ms_1dev": round(ms1, 3),
+        "fused_ms_8dev": round(ms8, 3),
+        "speedup_8dev": round(ms1 / ms8, 2) if ms8 else float("inf"),
+        "sharded_bitwise": bool((new_g == ref_g).all()),
+        "sharded_allclose": bool(np.allclose(new_g, ref_g, atol=1e-6)),
+    }
+
+
+def run_mesh_child(smoke: bool) -> None:
+    """--mesh-child: emit the mesh column for the same cell grid as
+    ``run`` on one MESH_JSON line (parsed by the parent)."""
+    assert len(jax.devices()) >= MESH_DEVICES, (
+        "run via the parent, which sets XLA_FLAGS="
+        f"--xla_force_host_platform_device_count={MESH_DEVICES}")
+    ks = (4,) if smoke else KS
+    reps = 1
+    cells = {}
+    for name, cfg in _bench_models(smoke):
+        program = get_split_program(cfg)
+        params = program.init(jax.random.PRNGKey(0))
+        layout = program.flat_layout(params)
+        for K in ks:
+            if K * layout.padded * 4 > MAX_STACK_BYTES:
+                continue
+            for scen, kw in SCENARIOS.items():
+                if smoke and scen != "avg":
+                    continue
+                cell = mesh_cell(program, params, K, reps=reps, **kw)
+                cells[f"{name}|{K}|{scen}"] = cell
+                print(f"mesh {name} K={K:<4d} {scen:<10s} "
+                      f"1dev={cell['fused_ms_1dev']:8.1f}ms "
+                      f"8dev={cell['fused_ms_8dev']:8.1f}ms "
+                      f"x{cell['speedup_8dev']} "
+                      f"bitwise={cell['sharded_bitwise']}",
+                      file=sys.stderr, flush=True)
+    print("MESH_JSON:" + json.dumps(cells))
+
+
+def _mesh_column(smoke: bool) -> Dict[str, Dict]:
+    """Spawn the forced-8-device child and collect its per-cell column."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                        f"{MESH_DEVICES}")
+    cmd = [sys.executable, "-m", "benchmarks.server_step", "--mesh-child"]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(f"mesh child failed:\n{out.stderr[-4000:]}")
+    for line in out.stdout.splitlines():
+        if line.startswith("MESH_JSON:"):
+            return json.loads(line[len("MESH_JSON:"):])
+    raise RuntimeError(f"mesh child emitted no MESH_JSON line:\n"
+                       f"{out.stdout[-2000:]}")
+
+
 def run(smoke: bool = False, out_path: str = None) -> Dict:
     # smoke runs must not clobber the recorded full-sweep artifact: they
     # land in the gitignored benchmarks/_smoke/
     from benchmarks.common import bench_out_path
     out_path = bench_out_path("server_step", smoke, out_path)
-    models = [("vgg5", VGG5)]
-    if not smoke:
-        models.append(("llama3-8b-smoke", get_smoke_config("llama3-8b")))
+    models = _bench_models(smoke)
     ks = (4,) if smoke else KS
     reps = 1 if smoke else 2
     results = []
@@ -133,8 +242,16 @@ def run(smoke: bool = False, out_path: str = None) -> Dict:
                       f"ref={cell['ref_ms']:8.1f}ms "
                       f"fused={cell['fused_ms']:8.1f}ms "
                       f"x{cell['speedup']}", flush=True)
+    # mesh column: re-time every cell 1-device vs 8-device in a child that
+    # forces 8 host devices, and record sharded-vs-reference equivalence
+    mesh = _mesh_column(smoke)
+    for cell in results:
+        if "skipped" in cell:
+            continue
+        cell["mesh"] = mesh.get(
+            f"{cell['model']}|{cell['K']}|{cell['scenario']}")
     payload = {"backend": jax.default_backend(), "smoke": smoke,
-               "results": results}
+               "mesh_devices": MESH_DEVICES, "results": results}
     with open(out_path, "w") as f:
         json.dump(payload, f, indent=2)
     print(f"wrote {out_path}")
@@ -158,5 +275,11 @@ if __name__ == "__main__":
     ap.add_argument("--out", default=None,
                     help="output JSON (default: BENCH_server_step.json, "
                          "or benchmarks/_smoke/ under --smoke)")
+    ap.add_argument("--mesh-child", action="store_true",
+                    help="internal: emit the 8-device mesh column "
+                         "(spawned by the parent with forced host devices)")
     args = ap.parse_args()
-    run(smoke=args.smoke, out_path=args.out)
+    if args.mesh_child:
+        run_mesh_child(smoke=args.smoke)
+    else:
+        run(smoke=args.smoke, out_path=args.out)

@@ -86,6 +86,7 @@ from repro.fl.loop import (
     FLConfig,
     RoundClock,
     _delta_trees,
+    _resolve_mesh,
     _resolve_planner,
     _zero_errors,
 )
@@ -181,7 +182,14 @@ def run_federated_async(
         raise ValueError(f"unknown server_step {fl.server_step!r}; "
                          f"known: fused, reference")
     fused = fl.server_step == "fused"
-    layout = program.flat_layout(params)
+    mesh = _resolve_mesh(fl, fused)
+    if mesh is not None:
+        params = program.shard_params(params, mesh)
+    # keep the legacy call signature when no mesh is configured --
+    # mesh_shape=None must not even pass the kwarg (custom
+    # SplitPrograms may predate it)
+    layout = (program.flat_layout(params, mesh=mesh)
+              if mesh is not None else program.flat_layout(params))
     if fl.checkpoint_dir and not layout.exact_fp32:
         raise ValueError(
             "async checkpoint/resume needs an fp32 parameter layout "
@@ -249,6 +257,10 @@ def run_federated_async(
     if restored_state is not None:
         version = int(step)
         params = restored_state["params"]
+        if mesh is not None:
+            # checkpoints hold host numpy; re-place on the mesh so the
+            # resumed run executes the same sharded programs
+            params = program.shard_params(params, mesh)
         if fused:
             g_flat = layout.flatten(params)
         if track_errors:

@@ -166,18 +166,113 @@ class FlatLayout:
         return self._meta[key]
 
 
+class ShardedFlatLayout(FlatLayout):
+    """FlatLayout over a ``(data, model)`` device mesh
+    (``parallel.sharding.make_flat_mesh``): the flat parameter vector is
+    laid out along the ``model`` axis in whole compression blocks, stacked
+    client rows along ``data``.
+
+    The buffer gains a tail pad of ``flat_shard_tail(...)`` elements so its
+    block count divides the model-axis size — the flat-vector fix for the
+    ``AxisRules`` divisibility fallback, which would otherwise *replicate*
+    (see parallel/sharding.py).  The tail is masked out of the compression
+    metadata with ``(valid=0, k=1)`` rows and is zero in every delta / EF
+    row by construction, so it never contributes to an update.
+    ``flatten`` / ``rows_to_deltas`` hand back mesh-resident buffers
+    (computed single-device, then placed with ``jax.device_put``);
+    ``unflatten`` reads only the true leaf segments, so round-trips stay
+    bitwise exactly as in the base layout."""
+
+    def __init__(self, tree: Params, mesh, block: int = 1024):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.parallel.sharding import flat_shard_tail
+        super().__init__(tree, block=block)
+        if not {"data", "model"} <= set(mesh.shape):
+            raise ValueError(f"mesh axes {tuple(mesh.shape)} must include "
+                             f"'data' and 'model'")
+        self.mesh = mesh
+        self.data_size = int(mesh.shape["data"])
+        self.model_size = int(mesh.shape["model"])
+        self.base_padded = self.padded
+        self.tail = flat_shard_tail(self.padded, self.block, self.model_size)
+        self.padded += self.tail
+        self.shard_elems = self.padded // self.model_size
+        self.vec_sharding = NamedSharding(mesh, P("model"))
+        self.rows_sharding = NamedSharding(mesh, P(None, "model"))
+        self.stack_sharding = NamedSharding(mesh, P("data", "model"))
+        # Keep the base class's plain jitted executables and re-place their
+        # results with jax.device_put.  Forcing ``out_shardings`` (or letting
+        # GSPMD propagate a sharded operand) through the concatenate-of-leaf-
+        # segments program mis-places whole segments on meshes whose ``data``
+        # axis is > 1 (observed on the CPU partitioner: wrong *values*, not
+        # just wrong layout).  device_put after the fact is pure data
+        # movement, so the buffers stay bitwise identical to the legacy
+        # layout while still landing mesh-resident.  The delta paths subtract
+        # the sharded global only after both operands carry the same
+        # placement; unflatten gathers the buffer first so the slice-per-leaf
+        # program never runs under the partitioner.
+        _rep = NamedSharding(mesh, P())
+        _fl, _fs = self._flatten, self._flatten_stacked
+        _unfl = self._unflatten
+        _stack = jax.jit(
+            lambda rows: jnp.stack([self._flatten_impl(r) for r in rows]))
+        _sub = jax.jit(lambda s, g: s - g[None])
+        self._flatten = lambda t: jax.device_put(_fl(t), self.vec_sharding)
+        self._flatten_stacked = lambda t: jax.device_put(
+            _fs(t), self.rows_sharding)
+        self._unflatten = lambda buf: _unfl(jax.device_put(buf, _rep))
+        self._deltas_list = lambda rows, g: _sub(
+            jax.device_put(_stack(rows), self.rows_sharding),
+            jax.device_put(g, self.vec_sharding))
+        self._deltas_stacked = lambda tree, g: _sub(
+            jax.device_put(_fs(tree), self.rows_sharding),
+            jax.device_put(g, self.vec_sharding))
+
+    # tail-padded variants of the bitwise flatten family: identical leaf
+    # segments, plus `tail` zero lanes so padded % (block * model) == 0
+    def _flatten_impl(self, tree: Params) -> jnp.ndarray:
+        flat = super()._flatten_impl(tree)
+        return jnp.pad(flat, (0, self.tail)) if self.tail else flat
+
+    def _flatten_stacked_impl(self, tree: Params) -> jnp.ndarray:
+        flat = super()._flatten_stacked_impl(tree)
+        return (jnp.pad(flat, ((0, 0), (0, self.tail)))
+                if self.tail else flat)
+
+    def block_meta(self, density: float) -> np.ndarray:
+        """Base per-leaf ``(valid, k)`` rows plus ``(0, 1)`` rows masking
+        the tail shard's padding blocks (they select lane 0 of an all-zero
+        block, so output and error feedback stay exactly zero there)."""
+        key = round(float(density), 12)
+        if key not in self._meta:
+            rows = np.concatenate(
+                [density_block_meta(sz, self.block, density)
+                 for sz in self.sizes], axis=0)
+            if self.tail:
+                pad_rows = np.tile(np.asarray([[0, 1]], np.int32),
+                                   (self.tail // self.block, 1))
+                rows = np.concatenate([rows, pad_rows], axis=0)
+            self._meta[key] = rows
+        return self._meta[key]
+
+
 _LAYOUT_CACHE: Dict[tuple, FlatLayout] = {}
 
 
-def layout_of(tree: Params, block: int = 1024) -> FlatLayout:
+def layout_of(tree: Params, block: int = 1024, mesh=None) -> FlatLayout:
     """Resolve (and cache) the FlatLayout for a parameter structure.  Two
     trees with the same treedef/shapes/dtypes share one layout — and with
-    it the jitted flatten/unflatten/server-step executables."""
+    it the jitted flatten/unflatten/server-step executables.  ``mesh``
+    (a ``(data, model)`` Mesh) selects the ``ShardedFlatLayout`` variant;
+    ``None`` is the exact legacy single-device layout."""
     leaves, treedef = jax.tree_util.tree_flatten(tree)
     key = (treedef, tuple(tuple(l.shape) for l in leaves),
-           tuple(str(jnp.asarray(l).dtype) for l in leaves), int(block))
+           tuple(str(jnp.asarray(l).dtype) for l in leaves), int(block),
+           mesh)
     if key not in _LAYOUT_CACHE:
-        _LAYOUT_CACHE[key] = FlatLayout(tree, block=block)
+        _LAYOUT_CACHE[key] = (
+            FlatLayout(tree, block=block) if mesh is None
+            else ShardedFlatLayout(tree, mesh, block=block))
     return _LAYOUT_CACHE[key]
 
 
@@ -324,6 +419,198 @@ class ServerStep:
         return self._reduce(deltas, w, errors, masks)
 
 
+class ShardedServerStep(ServerStep):
+    """``ServerStep`` over a ``ShardedFlatLayout``'s device mesh.  Same
+    call contract, same numbers; two execution strategies chosen per path
+    for exactness and speed (tests/test_sharded_flatbuf.py drills both):
+
+    * **plain / masked averaging** — the *same* jitted matvec program as
+      the single-device step.  The operands carry NamedShardings, so XLA's
+      SPMD partitioner slices the non-contracting (model) dim of
+      ``w @ deltas`` per device with no cross-device reduction — bitwise
+      identical to the single-device step at every model-axis width.
+      (A hand-partitioned ``shard_map`` matvec + psum compiles to a
+      different fusion and drifts in the last ulp, which is why it is NOT
+      used here.)
+
+    * **compression pipeline** — an explicit ``shard_map``: each device
+      scans its ``(data-shard x model-shard)`` slice of the client rows
+      through EF + block top-k + int8 with its own slice of the block
+      metadata (an operand — ``topk_compress_rows``), then psums the
+      partial weighted accumulator over ``data``.  Every op is block-local
+      and shard sizes are whole blocks, so at ``data = 1`` the program is
+      bitwise equal to the single-device scan; sharding clients
+      (``data > 1``) splits the fp32 accumulation across devices and
+      agrees to fp32 tolerance.  Client rows are zero-padded (zero weight)
+      up to a multiple of the data-axis size; the pad rows produce exactly
+      zero contributions and their EF rows are sliced off before return.
+    """
+
+    def __init__(self, layout: ShardedFlatLayout, density: float = 1.0,
+                 quantize: bool = False, interpret: Optional[bool] = None):
+        if not isinstance(layout, ShardedFlatLayout):
+            raise TypeError("ShardedServerStep needs a ShardedFlatLayout; "
+                            "use ServerStep for the single-device layout")
+        super().__init__(layout, density=density, quantize=quantize,
+                         interpret=interpret)
+        self.mesh = layout.mesh
+        self.data_size = layout.data_size
+        self._shmaps: Dict[tuple, Any] = {}
+        if self.track_errors:
+            self._meta_rows = jnp.asarray(self._meta, jnp.int32)
+
+    # -- the shard_map compression programs --------------------------------
+    def _shmap(self, masked: bool, reduce_only: bool):
+        """Build (and cache) the jitted shard_map for one signature.  The
+        body always takes ``(g, deltas, w, err, masks, meta)``; absent
+        operands are 1-element dummies with replicated specs that the
+        variant's trace never reads."""
+        key = (masked, reduce_only)
+        if key in self._shmaps:
+            return self._shmaps[key]
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.kernels.topk_compress.ops import topk_compress_rows
+        track, quant = self.track_errors, self.quantize
+        block = self.layout.block
+        kmax = self._kmax if track else 0
+        interpret = self.interpret
+        row, vec = P("data", "model"), P("model")
+
+        def body(g, deltas, w, err, masks, meta):
+            def one(carry, xs):
+                acc, den = carry
+                if masked:
+                    *xs, m = xs
+                if track:
+                    d, e, wi = xs
+                    if masked:
+                        d = m * d
+                    carried = d + e
+                    comp = topk_compress_rows(carried[None], meta, kmax,
+                                              block=block,
+                                              interpret=interpret)[0]
+                else:
+                    d, wi = xs
+                    if masked:
+                        d = m * d
+                    carried, comp = d, d
+                if quant:
+                    from repro.kernels.quant_transfer.ops import (
+                        dequantize,
+                        quantize,
+                    )
+                    rows = comp.reshape(-1, block)
+                    q, s = quantize(rows, interpret=interpret)
+                    sent = dequantize(q, s,
+                                      interpret=interpret).reshape(-1)
+                else:
+                    sent = comp
+                if masked:
+                    sent = m * sent
+                    den = den + wi * m
+                new_e = carried - sent if track else None
+                return (acc + wi * sent, den), new_e
+
+            xs = (deltas, err, w) if track else (deltas, w)
+            if masked:
+                xs = xs + (masks,)
+            zero = jnp.zeros(deltas.shape[1:], deltas.dtype)
+            (acc, den), new_err = jax.lax.scan(one, (zero, zero), xs)
+            acc = jax.lax.psum(acc, "data")
+            if masked:
+                den = jax.lax.psum(den, "data")
+            outs = []
+            if reduce_only:
+                outs.append(acc)
+                if masked:
+                    outs.append(den)
+            elif masked:
+                upd = (jnp.where(den > 0, acc, 0.0)
+                       / jnp.where(den > 0, den, 1.0))
+                outs.append(g + upd)
+            else:
+                outs.append(g + acc)
+            if track:
+                outs.append(new_err)
+            return tuple(outs)
+
+        rep = P()   # spec of the unread dummy operands
+        in_specs = (rep if reduce_only else vec, row, P("data"),
+                    row if track else rep, row if masked else rep,
+                    P("model", None) if track else rep)
+        n_out = 1 + int(reduce_only and masked) + int(track)
+        out_specs = tuple([vec] * (n_out - int(track)) + [row] * int(track))
+        # check_rep=False: the quantize path runs a pallas_call inside the
+        # mapped body and shard_map's replication checker has no rule for
+        # it; the psum placement over "data" is explicit above.
+        fn = jax.jit(shard_map(body, mesh=self.mesh, in_specs=in_specs,
+                               out_specs=out_specs if n_out > 1
+                               else out_specs[0], check_rep=False))
+        self._shmaps[key] = fn
+        return fn
+
+    def _pad_rows(self, w, *arrs):
+        """Zero-pad the client axis to a multiple of the data-axis size
+        (zero weight => exactly zero contribution through every path)."""
+        K = int(arrs[0].shape[0])
+        pad = (-K) % self.data_size
+        if not pad:
+            return K, w, arrs
+        w = jnp.concatenate([w, jnp.zeros((pad,), w.dtype)])
+        arrs = tuple(
+            None if a is None else
+            jnp.concatenate([a, jnp.zeros((pad,) + a.shape[1:], a.dtype)])
+            for a in arrs)
+        return K, w, arrs
+
+    def _dummies(self, masked: bool):
+        d = jnp.zeros((1,), jnp.float32)
+        err = d if not self.track_errors else None
+        masks = d if not masked else None
+        meta = self._meta_rows if self.track_errors else d
+        return err, masks, meta
+
+    def __call__(self, g_flat, deltas, weights, errors=None, masks=None):
+        if not self.track_errors and not self.quantize:
+            # averaging: the inherited single-device program under GSPMD
+            return super().__call__(g_flat, deltas, weights, errors,
+                                    masks=masks)
+        w = jnp.asarray(_normalized_f64(weights), jnp.float32)
+        self.calls += 1
+        K, w, (deltas, errors, masks) = self._pad_rows(w, deltas, errors,
+                                                       masks)
+        derr, dmask, meta = self._dummies(masks is not None)
+        outs = self._shmap(masks is not None, False)(
+            g_flat, deltas, w, errors if errors is not None else derr,
+            masks if masks is not None else dmask, meta)
+        if not self.track_errors:
+            return (outs if not isinstance(outs, tuple) else outs[0]), None
+        new_g, new_err = outs
+        return new_g, new_err[:K]
+
+    def reduce(self, deltas, weights, errors=None, masks=None):
+        if not self.track_errors and not self.quantize:
+            return super().reduce(deltas, weights, errors, masks)
+        w = jnp.asarray(_normalized_f64(weights), jnp.float32)
+        self.reduce_calls += 1
+        K, w, (deltas, errors, masks) = self._pad_rows(w, deltas, errors,
+                                                       masks)
+        derr, dmask, meta = self._dummies(masks is not None)
+        outs = self._shmap(masks is not None, True)(
+            jnp.zeros((1,), jnp.float32), deltas, w,
+            errors if errors is not None else derr,
+            masks if masks is not None else dmask, meta)
+        outs = outs if isinstance(outs, tuple) else (outs,)
+        pos = 1
+        den = None
+        if masks is not None:
+            den = outs[pos]
+            pos += 1
+        new_err = outs[pos][:K] if self.track_errors else None
+        return outs[0], den, new_err
+
+
 _STEP_CACHE: Dict[tuple, ServerStep] = {}
 
 
@@ -333,11 +620,14 @@ def get_server_step(layout: FlatLayout, density: float = 1.0,
     """Cached ServerStep per (layout, density, quantize) — the per-``K``
     executable cache lives inside the step's jit (shapes are part of the
     XLA cache key), so every loop and engine shares one compiled program
-    per distinct client count."""
+    per distinct client count.  A ``ShardedFlatLayout`` resolves to the
+    mesh-sharded step; callers are oblivious."""
     key = (layout, round(float(density), 12), bool(quantize), interpret)
     if key not in _STEP_CACHE:
-        _STEP_CACHE[key] = ServerStep(layout, density=density,
-                                      quantize=quantize, interpret=interpret)
+        cls = (ShardedServerStep if isinstance(layout, ShardedFlatLayout)
+               else ServerStep)
+        _STEP_CACHE[key] = cls(layout, density=density,
+                               quantize=quantize, interpret=interpret)
     return _STEP_CACHE[key]
 
 

@@ -37,6 +37,14 @@ the split programs are reserved for the >= 2-edge case they exist for.)
 EF rows are re-ordered back to the caller's survivor order so the dense
 ``delta_errors`` scatter and the ``EFStore.store`` path are oblivious to
 the edge partition.
+
+Mesh-sharded rounds (``FLConfig.mesh_shape``) need no code here: with a
+``ShardedFlatLayout`` the cached step is a ``ShardedServerStep``, whose
+``reduce`` override runs each edge's pipeline in the sharded program
+(reduce-only mode, one ``psum("data")``), and ``RootStep``'s plain
+``g + w @ rows`` combine partitions under GSPMD on the mesh-resident
+rows — the same avg-path mechanism that is bitwise at every mesh width
+(see fl/flatbuf.py).
 """
 from __future__ import annotations
 

@@ -139,6 +139,21 @@ class FLConfig:
                                      # discount (1 + s)^-a on update weights
     max_staleness: Optional[int] = None  # drop updates staler than this
                                          # (None: apply every update)
+    mesh_shape: Optional[Sequence[int]] = None
+                                     # (data, model) device-mesh shape for
+                                     # the sharded flat-buffer server step
+                                     # (fl/flatbuf.ShardedFlatLayout over
+                                     # parallel.sharding.make_flat_mesh):
+                                     # the flat param vector shards along
+                                     # 'model' in whole blocks, stacked
+                                     # client rows along 'data', and params
+                                     # are placed via param_pspecs so split
+                                     # rounds run mesh-sharded end to end.
+                                     # Requires server_step="fused" and
+                                     # data*model visible devices.  None =
+                                     # the exact legacy single-device path,
+                                     # bitwise (asserted in
+                                     # tests/test_sharded_flatbuf.py)
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
@@ -159,6 +174,21 @@ def _resolve_planner(
         return StaticPlanner(fl.static_op if fl.static_op is not None
                              else native_op)
     return StaticPlanner(native_op)
+
+
+def _resolve_mesh(fl: FLConfig, fused: bool):
+    """``FLConfig.mesh_shape`` -> the ``(data, model)`` Mesh (or ``None``
+    for the exact legacy single-device path).  Shared by the sync and
+    async loops so both thread the same mesh through layout, server step,
+    params placement and checkpointing."""
+    if fl.mesh_shape is None:
+        return None
+    if not fused:
+        raise ValueError(
+            "mesh_shape runs through the fused flat-buffer server step; "
+            "server_step='reference' is the single-device per-leaf oracle")
+    from repro.parallel.sharding import make_flat_mesh
+    return make_flat_mesh(fl.mesh_shape)
 
 
 def _zero_errors(K: int, layout) -> jnp.ndarray:
@@ -303,7 +333,14 @@ def run_federated(
         raise ValueError(f"unknown server_step {fl.server_step!r}; "
                          f"known: fused, reference")
     fused = fl.server_step == "fused"
-    layout = program.flat_layout(params)
+    mesh = _resolve_mesh(fl, fused)
+    if mesh is not None:
+        params = program.shard_params(params, mesh)
+    # keep the legacy call signature when no mesh is configured --
+    # mesh_shape=None must not even pass the kwarg (custom
+    # SplitPrograms may predate it)
+    layout = (program.flat_layout(params, mesh=mesh)
+              if mesh is not None else program.flat_layout(params))
     loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
                                       seed=fl.seed)
     engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
@@ -358,6 +395,11 @@ def run_federated(
                                     template=True,
                                     ef_len=ef_template_len(shapes)))
                 params = restored["params"]
+                if mesh is not None:
+                    # checkpoints hold host numpy; re-place on the mesh so
+                    # the resumed run executes the same sharded programs
+                    # (bitwise resume — tests/test_sharded_flatbuf.py)
+                    params = program.shard_params(params, mesh)
                 if track_errors:
                     if virtualized:
                         delta_errors.restore(

@@ -138,6 +138,30 @@ def topk_compress_flat(buf: jnp.ndarray, meta: np.ndarray, kmax: int,
     return out.reshape(R, n)
 
 
+def topk_compress_rows(buf: jnp.ndarray, meta: jnp.ndarray, kmax: int,
+                       block: int = 1024,
+                       interpret: Optional[bool] = None) -> jnp.ndarray:
+    """``topk_compress_flat`` for a *traced* ``(n/block, 2)`` meta table.
+
+    The mesh-sharded server step (fl/flatbuf.ShardedServerStep) runs inside
+    ``shard_map``, where each device sees only its own model-axis slice of
+    the block metadata — an operand, not a trace-time constant — so the
+    numpy ``np.tile`` in ``topk_compress_flat`` cannot apply.  The selection
+    per block is identical (same ``_topk_blocks_ref`` / pallas body), so a
+    device's output over its blocks is bitwise the corresponding slice of
+    the full-buffer call."""
+    R, n = buf.shape
+    nb = n // block
+    tiled = jnp.tile(jnp.asarray(meta, jnp.int32), (R, 1))
+    if interpret is None and default_interpret():
+        out = _topk_blocks_ref(buf.reshape(R * nb, block), tiled, kmax)
+        return out.reshape(R, n)
+    return topk_compress_pallas(buf.reshape(R * n), tiled, kmax=kmax,
+                                block=block,
+                                interpret=resolve_interpret(interpret)
+                                ).reshape(R, n)
+
+
 def compress_tree(tree: Any, error: Optional[Any], density: float = 0.01,
                   block: int = 1024, interpret: Optional[bool] = None
                   ) -> Tuple[Any, Any]:

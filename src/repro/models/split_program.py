@@ -78,14 +78,36 @@ class SplitProgram:
         inits = [self.init(k, dtype) for k in jax.random.split(key, n)]
         return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *inits)
 
-    def flat_layout(self, params: Params, block: int = 1024):
+    def flat_layout(self, params: Params, block: int = 1024, mesh=None):
         """The flatten-once server-step layout for this program's parameter
         structure (``fl.flatbuf.FlatLayout``): one contiguous fp32 buffer
         with a block-aligned per-leaf offset table, cached per structure so
         every loop/engine shares the same jitted flatten/unflatten and the
-        same compiled fused server step."""
+        same compiled fused server step.  ``mesh`` (a ``(data, model)``
+        Mesh from ``parallel.sharding.make_flat_mesh``) selects the
+        mesh-sharded ``ShardedFlatLayout``; ``None`` keeps the exact legacy
+        single-device layout."""
         from repro.fl.flatbuf import layout_of
-        return layout_of(params, block=block)
+        return layout_of(params, block=block, mesh=mesh)
+
+    def shard_params(self, params: Params, mesh) -> Params:
+        """Place ``params`` on ``mesh`` under the ``param_pspecs`` rules
+        (parallel/sharding.py): leaf *path names* resolve to tensor-parallel
+        PartitionSpecs over the ``model`` axis (LM families shard wq/wo,
+        ffn, embeddings, ...), with the divisibility fallback replicating
+        leaves whose dims do not divide.  fsdp is off — the flat server
+        step owns the ``data`` axis for client rows, not for ZeRO-style
+        param sharding.  Families whose leaf names match no rule (VGG) come
+        back fully replicated, which is still a valid mesh placement for
+        the sharded flat layout (``flatten`` re-shards along ``model``)."""
+        from repro.parallel.sharding import (
+            make_axis_rules,
+            named_shardings,
+            param_pspecs,
+        )
+        rules = make_axis_rules(mesh, fsdp=False, tp=True)
+        specs = param_pspecs(params, rules)
+        return jax.device_put(params, named_shardings(specs, mesh))
 
     def client_forward(self, params: Params, batch: Dict, op: int):
         """Device stage: inputs -> cut payload (a pytree of arrays)."""

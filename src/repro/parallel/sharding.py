@@ -69,6 +69,51 @@ class AxisRules:
         return axes if len(axes) > 1 else axes[0]
 
 
+def make_flat_mesh(mesh_shape: Sequence[int],
+                   axis_names: Tuple[str, str] = ("data", "model")) -> Mesh:
+    """The ``(data, model)`` device mesh behind ``FLConfig.mesh_shape``.
+
+    ``data`` carries stacked client-delta rows, ``model`` the flat
+    parameter vector (fl/flatbuf.ShardedFlatLayout).  Uses the first
+    ``data * model`` local devices; raises if the host exposes fewer (CI's
+    multi-device lane forces 8 virtual CPU devices via
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``)."""
+    shape = tuple(int(s) for s in mesh_shape)
+    if len(shape) != 2 or any(s < 1 for s in shape):
+        raise ValueError(f"mesh_shape must be two positive ints "
+                         f"(data, model); got {mesh_shape!r}")
+    need = shape[0] * shape[1]
+    devs = jax.devices()
+    if need > len(devs):
+        raise ValueError(
+            f"mesh_shape {shape} needs {need} devices but only "
+            f"{len(devs)} are visible; set XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need} (before "
+            f"importing jax) or shrink the mesh")
+    import numpy as np
+    return Mesh(np.asarray(devs[:need]).reshape(shape), axis_names)
+
+
+def flat_shard_tail(padded: int, block: int, model_size: int) -> int:
+    """Tail padding (elements) that makes a block-aligned flat buffer split
+    across ``model_size`` shards in whole blocks.
+
+    This is the flat-vector replacement for ``AxisRules.resolve``'s
+    divisibility fallback: a *leaf* dimension that does not divide its mesh
+    axis falls back to replication — harmless for one weight matrix, but
+    fatal for the flat server-step buffer, where replicating would copy the
+    O(K x n) stacked delta rows onto every model-axis device and erase the
+    sharding's memory benefit.  ``ShardedFlatLayout`` instead pads the
+    final shard and masks the tail out of the compression metadata
+    (``(valid=0, k=1)`` rows), so every shard owns exactly
+    ``padded / model_size`` distinct elements (asserted by per-shard byte
+    accounting in tests/test_sharded_flatbuf.py)."""
+    if padded % block:
+        raise ValueError(f"padded={padded} is not block-aligned "
+                         f"(block={block})")
+    return (-padded) % (block * int(model_size))
+
+
 def make_axis_rules(mesh: Mesh, *, fsdp: bool = True, tp: bool = True,
                     seq_shard: bool = False,
                     extra: Optional[Dict[str, Tuple[str, ...]]] = None) -> AxisRules:

@@ -1,0 +1,215 @@
+"""Bench regression gate (run in CI after the test suites).
+
+Runs every ``--smoke`` benchmark to the gitignored ``benchmarks/_smoke/``
+and compares each fresh artifact against the committed full-sweep
+``BENCH_*.json`` at the repo root:
+
+* **schema** — a per-bench list of required dotted key paths must resolve
+  in BOTH artifacts (a missing key in the smoke run means the bench broke;
+  missing in the committed artifact means it was not regenerated after a
+  schema change);
+* **equivalence flags** — correctness booleans recorded by the benches
+  (fused-vs-reference bitwise equality, sharded-vs-reference mesh flags)
+  must be truthy in both artifacts: a bench that still *runs* but no
+  longer reproduces the reference is a regression even if it got faster;
+* **throughput** — one representative throughput/latency field per bench
+  is compared between the smoke run and the committed artifact as a
+  ratio.  The tolerance is deliberately loose (``RATIO_TOL = 10``):
+  smoke grids are smaller, reps lower, and CI machines differ from the
+  machine that recorded the artifact, so the gate is meant to catch
+  order-of-magnitude regressions (interpreter fallbacks, lost fusion,
+  accidental per-leaf dispatch) and broken wiring — not timing noise.
+
+    PYTHONPATH=src python tools/check_bench.py            # all benches
+    PYTHONPATH=src python tools/check_bench.py server_step
+"""
+from __future__ import annotations
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+from typing import Any, Dict, List
+
+REPO = Path(__file__).resolve().parent.parent
+RATIO_TOL = 10.0
+
+# dotted paths; [] iterates list elements ("results[].K" checks every cell).
+# Cells may declare themselves skipped ("skipped" key) — they are exempt.
+SCHEMA: Dict[str, List[str]] = {
+    "server_step": [
+        "backend", "mesh_devices",
+        "results[].model", "results[].K", "results[].scenario",
+        "results[].ref_ms", "results[].fused_ms", "results[].speedup",
+        "results[].fused_dispatches",
+        "results[].mesh.devices", "results[].mesh.fused_ms_1dev",
+        "results[].mesh.fused_ms_8dev", "results[].mesh.speedup_8dev",
+        "results[].mesh.sharded_bitwise", "results[].mesh.sharded_allclose",
+    ],
+    "hierarchy": [
+        "backend", "fleet[].K", "fleet[].cohort",
+        "edge_scaling[].num_edges", "edge_scaling[].agg_ms",
+        "edge_scaling[].root_rows_bytes",
+        "equivalence.bitwise", "equivalence.rounds",
+    ],
+    "serving": [
+        "backend", "model", "calibration.saturated_tokens_per_s",
+        "capacity_req_per_s",
+        "levels[].tokens_per_s", "levels[].p99_latency", "levels[].hotswap",
+    ],
+    "hetero": [
+        "backend", "alpha_sweep[].alpha", "alpha_sweep[].final_acc",
+        "width_sweep[].fleet", "width_sweep[].final_acc",
+        "churn_time_to_target.clean.virtual_time",
+    ],
+}
+
+# required only in the committed full-sweep artifact: smoke grids are too
+# small to guarantee them (e.g. the 3-round churn drill may never reach
+# the accuracy target, recording ``churn: null``).
+SCHEMA_COMMITTED_ONLY: Dict[str, List[str]] = {
+    "server_step": [],
+    "hierarchy": [],
+    "serving": [],
+    "hetero": ["churn_time_to_target.churn.virtual_time"],
+}
+
+# correctness booleans that must be truthy wherever present.
+# server_step: sharded_allclose must hold for every cell; sharded_bitwise
+# only for cells the layout contract promises bitwise (avg scenario,
+# data=1 mesh -- see tests/test_sharded_flatbuf.py).
+EQUIVALENCE: Dict[str, List[str]] = {
+    "server_step": ["results[].mesh.sharded_allclose"],
+    "hierarchy": ["equivalence.bitwise"],
+    "serving": [],
+    "hetero": [],
+}
+
+# representative throughput field per bench, as (value_path, scale_path):
+# the compared quantity is value/scale, so fields whose smoke grid runs a
+# smaller problem (hierarchy's cohort) normalize to a per-unit rate before
+# the ratio check.  scale_path None compares the value directly.
+THROUGHPUT: Dict[str, tuple] = {
+    "server_step": ("results[0].fused_ms", None),
+    "hierarchy": ("edge_scaling[0].agg_ms", "edge_scaling[0].cohort_rows"),
+    "serving": ("calibration.saturated_tokens_per_s", None),
+    "hetero": ("churn_time_to_target.clean.virtual_time", None),
+}
+
+
+def _walk(obj: Any, parts: List[str], path: str) -> List[Any]:
+    """Resolve one dotted path; returns all matched values.  Raises
+    KeyError naming the missing segment."""
+    if not parts:
+        return [obj]
+    head, rest = parts[0], parts[1:]
+    if head.endswith("[]"):
+        key = head[:-2]
+        if key not in obj:
+            raise KeyError(f"{path}: missing '{key}'")
+        out = []
+        for i, item in enumerate(obj[key]):
+            if isinstance(item, dict) and "skipped" in item:
+                continue
+            out.extend(_walk(item, rest, f"{path}.{key}[{i}]"))
+        return out
+    if head.endswith("]"):          # explicit index: results[0]
+        key, idx = head[:-1].split("[")
+        if key not in obj:
+            raise KeyError(f"{path}: missing '{key}'")
+        return _walk(obj[key][int(idx)], rest, f"{path}.{head}")
+    if not isinstance(obj, dict) or head not in obj:
+        raise KeyError(f"{path}: missing '{head}'")
+    return _walk(obj[head], rest, f"{path}.{head}")
+
+
+def _get(artifact: Dict, dotted: str, label: str) -> List[Any]:
+    return _walk(artifact, dotted.split("."), label)
+
+
+def _run_smoke(name: str) -> Path:
+    print(f"[check_bench] running {name} --smoke ...", flush=True)
+    out = subprocess.run(
+        [sys.executable, "-m", f"benchmarks.{name}", "--smoke"],
+        cwd=REPO, capture_output=True, text=True, timeout=3600)
+    if out.returncode != 0:
+        raise SystemExit(f"FAIL {name}: smoke run crashed\n"
+                         f"{out.stdout[-2000:]}\n{out.stderr[-4000:]}")
+    path = REPO / "benchmarks" / "_smoke" / f"BENCH_{name}.json"
+    if not path.exists():
+        raise SystemExit(f"FAIL {name}: smoke run wrote no {path}")
+    return path
+
+
+def check_bench(name: str) -> List[str]:
+    errors: List[str] = []
+    committed_path = REPO / f"BENCH_{name}.json"
+    if not committed_path.exists():
+        return [f"{name}: committed artifact {committed_path.name} missing"]
+    committed = json.loads(committed_path.read_text())
+    smoke = json.loads(_run_smoke(name).read_text())
+
+    for dotted in SCHEMA[name]:
+        for label, artifact in (("smoke", smoke), ("committed", committed)):
+            try:
+                vals = _get(artifact, dotted, f"{name}[{label}]")
+                if not vals:
+                    # [] matched zero non-skipped elements: vacuous pass
+                    continue
+            except KeyError as e:
+                errors.append(f"{name}: schema ({label}): {e.args[0]}")
+    for dotted in SCHEMA_COMMITTED_ONLY[name]:
+        try:
+            _get(committed, dotted, f"{name}[committed]")
+        except KeyError as e:
+            errors.append(f"{name}: schema (committed): {e.args[0]}")
+
+    for dotted in EQUIVALENCE[name]:
+        for label, artifact in (("smoke", smoke), ("committed", committed)):
+            try:
+                vals = _get(artifact, dotted, f"{name}[{label}]")
+            except KeyError:
+                continue            # already reported by the schema pass
+            for v in vals:
+                if not v:
+                    errors.append(f"{name}: equivalence broken ({label}): "
+                                  f"{dotted} is {v!r}")
+
+    dotted, scale = THROUGHPUT[name]
+    try:
+        s = float(_get(smoke, dotted, f"{name}[smoke]")[0])
+        c = float(_get(committed, dotted, f"{name}[committed]")[0])
+        if scale is not None:
+            s /= float(_get(smoke, scale, f"{name}[smoke]")[0])
+            c /= float(_get(committed, scale, f"{name}[committed]")[0])
+        if s > 0 and c > 0:
+            ratio = max(s / c, c / s)
+            if ratio > RATIO_TOL:
+                errors.append(
+                    f"{name}: throughput drift: {dotted} smoke={s:g} vs "
+                    f"committed={c:g} (x{ratio:.1f} > {RATIO_TOL:g})")
+    except KeyError:
+        pass                        # already reported by the schema pass
+    return errors
+
+
+def main(argv: List[str]) -> int:
+    names = argv or list(SCHEMA)
+    unknown = [n for n in names if n not in SCHEMA]
+    if unknown:
+        print(f"unknown bench(es): {unknown}; known: {list(SCHEMA)}")
+        return 2
+    errors: List[str] = []
+    for name in names:
+        errors.extend(check_bench(name))
+    if errors:
+        print(f"\ncheck_bench: {len(errors)} error(s)")
+        for e in errors:
+            print(f"  - {e}")
+        return 1
+    print(f"check_bench: OK ({', '.join(names)})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
