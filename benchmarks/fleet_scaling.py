@@ -1,45 +1,54 @@
-"""Fleet scaling: simulation throughput of the two local-training engines.
+"""Fleet scaling: simulation throughput of the local-training engines,
+single-device and mesh-parallel.
 
 The RL controller's whole point is fleet-scale re-planning (paper §IV), so
 the simulator's rounds/sec at large K is the number that gates every
 experiment.  This bench drives the fl/fleet.py engines directly — local
 training + FedAvg aggregation, no planner/eval — and reports steady-state
-rounds/sec (one warm-up round excluded, so compile time is not conflated
-with dispatch throughput) for K simulated clients:
+seconds per round (one warm-up round excluded, so compile time is not
+conflated with dispatch throughput) for K simulated clients:
 
 * ``sequential`` — K x local_iters jit dispatches per round (pre-fleet loop)
-* ``batched``    — one vmap-over-clients/scan-over-iters dispatch per round
+* ``batched``    — one vmap-over-clients/scan-over-iters dispatch per
+  OP-group chunk (fl/fleet.BatchedEngine)
 
-    PYTHONPATH=src python -m benchmarks.fleet_scaling             # full grid
-    PYTHONPATH=src python -m benchmarks.fleet_scaling --quick     # K <= 16
-    PYTHONPATH=src python -m benchmarks.fleet_scaling --clients 64 \
-        --models lm_small
+Every (model, K) cell also grows a ``mesh`` row: the batched engine
+re-timed 1-device vs MESH_DEVICES forced-host-devices on a
+``make_flat_mesh((MESH_DEVICES, 1))`` data-axis mesh (the shard_map fleet
+step of ISSUE 10), with 1-dev-vs-mesh equivalence flags.  The mesh rows are
+produced by a ``--mesh-child`` subprocess because the host device count is
+fixed at jax import (same pattern as benchmarks/server_step.py).
 
-Output rows follow benchmarks/run.py: ``name,us_per_call,derived`` where
-``us_per_call`` is microseconds per simulated round and ``derived`` carries
-rounds/sec plus the batched-over-sequential speedup.
+    PYTHONPATH=src python -m benchmarks.fleet_scaling           # full sweep
+    PYTHONPATH=src python -m benchmarks.fleet_scaling --smoke   # CI: K=4 vgg
 
 Caveat (important for interpreting CPU numbers): the batched engine's
 per-client *weight gradients* lower to batched GEMMs / grouped convolutions
 with the client axis as the batch dimension.  Accelerator backends execute
-those as single large kernels — that, plus the K x local_iters -> 1
-dispatch reduction, is where the engine pays off.  XLA *CPU* executes them
-as a serial loop over clients (and grouped-conv backward falls off a
-cliff), so on few-core CPU hosts the measured speedup is bounded by how
-much of the step is shared-weight matmul work (modest for LMs, can invert
-for conv nets).  The equivalence guarantee is engine-independent either
-way (tests/test_fleet.py).
+those as single large kernels; XLA *CPU* executes them as a serial loop
+over clients, and the grouped-conv backward falls off a cliff superlinearly
+in the client axis.  That cliff is exactly why the data-axis mesh wins for
+the conv family even on a few-core host: each shard runs the plain
+small-client-axis program, so 8 shards of G=1 beat one fused G=8 before
+any core-level parallelism is counted.  For GEMM-bound LM families the
+fused single-device chunk is already near-optimal on CPU and the mesh
+column records an honest < 1 speedup.  The committed artifact's
+``acceptance`` block asserts that at least one K >= 64 cell clears 1.0
+(gated by tools/check_bench.py).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import subprocess
+import sys
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 import jax
 import numpy as np
 
-from benchmarks.common import Csv
 from repro.configs.lm_small import LM16M
 from repro.configs.vgg import VGG5
 from repro.data.loader import FleetLoader
@@ -54,6 +63,9 @@ MODELS: Dict[str, dict] = {
     "lm_small": dict(cfg=LM16M, batch=2, op=3, lr=0.3, per_client=8,
                      seq=16),
 }
+KS = (4, 16, 64)
+ITERS = 2            # truncated local round: keeps the K=64 cells tractable
+MESH_DEVICES = 8     # the mesh rows' forced-host-device count (data axis)
 
 
 def _client_data(name: str, spec: dict, K: int) -> List[dict]:
@@ -65,12 +77,18 @@ def _client_data(name: str, spec: dict, K: int) -> List[dict]:
 
 
 def _bench_engine(engine_name: str, spec: dict, clients: List[dict], K: int,
-                  rounds: int, iters: int) -> float:
-    """Seconds per round, steady state (aggregation included)."""
+                  rounds: int, iters: int, mesh=None,
+                  return_params: bool = False):
+    """Seconds per round, steady state (aggregation included).  With
+    ``return_params`` also returns the warm-up round's averaged params for
+    cross-engine equivalence flags (round 0 of the same seeded streams)."""
     program = get_split_program(spec["cfg"])
     params = program.init(jax.random.PRNGKey(0))
+    agg_params = params        # default-device copy for the FedAvg glue:
+    if mesh is not None:       # mesh-replicated params + device-0 delta rows
+        params = program.shard_params(params, mesh)  # would mix device sets
     engine = get_engine(engine_name, program, iters, seed=0, augment=False,
-                        quantize=False)
+                        quantize=False, mesh=mesh)
     loader = FleetLoader.for_clients(clients, spec["batch"], seed=0)
     ops = [spec["op"]] * K
     alive = list(range(K))
@@ -80,55 +98,173 @@ def _bench_engine(engine_name: str, spec: dict, clients: List[dict], K: int,
                                       spec["lr"])
         surv = take_rows(rows, list(range(len(idxs))))
         if isinstance(surv, StackedRows):
-            new = fedavg_delta_stacked(params, surv.tree)
+            new = fedavg_delta_stacked(agg_params, surv.tree)
         else:
-            new = fedavg_delta(params, surv)
+            new = fedavg_delta(agg_params, surv)
         jax.block_until_ready(new)
+        return new
 
-    one_round(0)                           # warm-up: compile + caches
+    first = one_round(0)                   # warm-up: compile + caches
     t0 = time.perf_counter()
     for r in range(1, rounds + 1):
         one_round(r)
-    return (time.perf_counter() - t0) / rounds
+    s = (time.perf_counter() - t0) / rounds
+    if return_params:
+        return s, first
+    return s
 
 
-def run(models: List[str], client_counts: List[int], rounds: int,
-        iters: int, engines=("sequential", "batched")) -> Csv:
-    csv = Csv()
-    for name in models:
+# -----------------------------------------------------------------------------
+# mesh column (runs in the --mesh-child subprocess: 8 forced host devices)
+# -----------------------------------------------------------------------------
+def mesh_cell(name: str, spec: dict, clients: List[dict], K: int,
+              rounds: int, iters: int) -> Dict:
+    """One (model, K) cell: batched engine 1-device vs the
+    ``(MESH_DEVICES, 1)`` data-axis mesh, plus equivalence flags from the
+    round-0 averaged params of the two runs (bitwise is not promised at
+    data > 1 — see docs/API.md — so ``allclose`` at fp32 tolerance is the
+    gated flag)."""
+    from repro.parallel.sharding import make_flat_mesh
+    s1, p1 = _bench_engine("batched", spec, clients, K, rounds, iters,
+                           return_params=True)
+    mesh = make_flat_mesh((MESH_DEVICES, 1))
+    s8, p8 = _bench_engine("batched", spec, clients, K, rounds, iters,
+                           mesh=mesh, return_params=True)
+    a = [np.asarray(l) for l in jax.tree_util.tree_leaves(p1)]
+    b = [np.asarray(l) for l in jax.tree_util.tree_leaves(p8)]
+    return {
+        "model": name, "K": K, "devices": MESH_DEVICES,
+        "s_per_round_1dev": round(s1, 4),
+        "s_per_round_mesh": round(s8, 4),
+        "speedup_mesh": round(s1 / s8, 3) if s8 else float("inf"),
+        "mesh_bitwise": bool(all((x == y).all() for x, y in zip(a, b))),
+        "mesh_allclose": bool(all(np.allclose(x, y, atol=1e-6)
+                                  for x, y in zip(a, b))),
+    }
+
+
+def run_mesh_child(smoke: bool) -> None:
+    """--mesh-child: emit the mesh rows for the same (model, K) grid as
+    ``run`` on one MESH_JSON line (parsed by the parent)."""
+    assert len(jax.devices()) >= MESH_DEVICES, (
+        "run via the parent, which sets XLA_FLAGS="
+        f"--xla_force_host_platform_device_count={MESH_DEVICES}")
+    cells = []
+    for name, ks, rounds in _grid(smoke):
         spec = MODELS[name]
-        for K in client_counts:
+        for K in ks:
             clients = _client_data(name, spec, K)
-            secs = {eng: _bench_engine(eng, spec, clients, K, rounds, iters)
-                    for eng in engines}
+            cell = mesh_cell(name, spec, clients, K, rounds, ITERS)
+            cells.append(cell)
+            print(f"mesh {name} K={K:<4d} "
+                  f"1dev={cell['s_per_round_1dev']:8.2f}s "
+                  f"mesh={cell['s_per_round_mesh']:8.2f}s "
+                  f"x{cell['speedup_mesh']} "
+                  f"allclose={cell['mesh_allclose']}",
+                  file=sys.stderr, flush=True)
+    print("MESH_JSON:" + json.dumps(cells))
+
+
+def _mesh_rows(smoke: bool) -> List[Dict]:
+    """Spawn the forced-8-device child and collect its mesh rows."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                        f"{MESH_DEVICES}")
+    cmd = [sys.executable, "-m", "benchmarks.fleet_scaling", "--mesh-child"]
+    if smoke:
+        cmd.append("--smoke")
+    out = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))),
+                         timeout=3600)
+    if out.returncode != 0:
+        raise RuntimeError(f"mesh child failed:\n{out.stderr[-4000:]}")
+    for line in out.stdout.splitlines():
+        if line.startswith("MESH_JSON:"):
+            return json.loads(line[len("MESH_JSON:"):])
+    raise RuntimeError(f"mesh child emitted no MESH_JSON line:\n"
+                       f"{out.stdout[-2000:]}")
+
+
+def _grid(smoke: bool):
+    """(model, Ks, measured rounds) cells.  Smoke: vgg K=4 only (CI gate
+    budget); full: both families over KS."""
+    if smoke:
+        return [("vgg", (4,), 1)]
+    return [(name, KS, 1) for name in MODELS]
+
+
+def run(smoke: bool = False, out_path: Optional[str] = None) -> Dict:
+    from benchmarks.common import bench_out_path
+    out_path = bench_out_path("fleet_scaling", smoke, out_path)
+    results = []
+    for name, ks, rounds in _grid(smoke):
+        spec = MODELS[name]
+        for K in ks:
+            clients = _client_data(name, spec, K)
+            secs = {}
+            for eng in ("sequential", "batched"):
+                if eng == "sequential" and K > 64:
+                    continue
+                secs[eng] = _bench_engine(eng, spec, clients, K, rounds,
+                                          ITERS)
             for eng, s in secs.items():
-                extra = ""
+                cell = {"model": name, "K": K, "engine": eng,
+                        "s_per_round": round(s, 4),
+                        "rounds_per_s": round(1.0 / s, 4)}
                 if eng == "batched" and "sequential" in secs:
-                    speedup = secs["sequential"] / s
-                    extra = f"; speedup {speedup:.1f}x vs sequential"
-                csv.add(f"fleet/{name}/K{K}/{eng}", s * 1e6,
-                        f"{1.0 / s:.2f} rounds/s{extra}")
-                print(csv.format_row(), flush=True)
-    return csv
+                    cell["speedup_vs_sequential"] = round(
+                        secs["sequential"] / s, 3)
+                results.append(cell)
+                print(f"{name} K={K:<4d} {eng:<10s} {s:8.2f} s/round",
+                      flush=True)
+    mesh = _mesh_rows(smoke)
+    payload = {"backend": jax.default_backend(), "smoke": smoke,
+               "mesh_devices": MESH_DEVICES, "local_iters": ITERS,
+               "results": results, "mesh": mesh}
+    if not smoke:
+        # the ISSUE 10 acceptance cell, recorded in the committed artifact
+        # and gated by tools/check_bench.py: at least one K >= 64 mesh row
+        # beats the 1-device batched engine
+        big = [c for c in mesh if c["K"] >= 64]
+        best = max(big, key=lambda c: c["speedup_mesh"])
+        payload["acceptance"] = {
+            "mesh_beats_1dev_at_K64": bool(best["speedup_mesh"] > 1.0),
+            "best": best,
+        }
+    with open(out_path, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {out_path}")
+    return payload
+
+
+def bench_fleet_scaling():
+    """benchmarks/run.py hook: smoke sweep, CSV-derived summary."""
+    payload = run(smoke=True)
+    batched = [c for c in payload["results"] if c["engine"] == "batched"]
+    m = payload["mesh"][0] if payload["mesh"] else {}
+    return 0.0, (f"{len(payload['results'])} engine cells; batched "
+                 f"{batched[0]['s_per_round']:.2f} s/round @K="
+                 f"{batched[0]['K']}; mesh({MESH_DEVICES},1) "
+                 f"x{m.get('speedup_mesh')} vs 1-dev "
+                 f"(allclose={m.get('mesh_allclose')})")
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--models", default="vgg,lm_small")
-    ap.add_argument("--clients", default="4,16,64,256")
-    ap.add_argument("--rounds", type=int, default=2,
-                    help="measured rounds per cell (after one warm-up)")
-    ap.add_argument("--iters", type=int, default=5,
-                    help="local iterations per round (paper's truncated 5)")
-    ap.add_argument("--quick", action="store_true", help="K <= 16 only")
-    ap.add_argument("--engines", default="sequential,batched",
-                    help="subset of engines (one cell per run of a big K)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke: vgg K=4 only")
+    ap.add_argument("--out", default=None,
+                    help="output JSON (default: BENCH_fleet_scaling.json, "
+                         "or benchmarks/_smoke/ under --smoke)")
+    ap.add_argument("--mesh-child", action="store_true",
+                    help="internal: emit the mesh rows "
+                         "(spawned by the parent with forced host devices)")
     args = ap.parse_args()
-    ks = [int(k) for k in args.clients.split(",")]
-    if args.quick:
-        ks = [k for k in ks if k <= 16] or [4]
-    run(args.models.split(","), ks, args.rounds, args.iters,
-        tuple(args.engines.split(",")))
+    if args.mesh_child:
+        run_mesh_child(smoke=args.smoke)
+    else:
+        run(smoke=args.smoke, out_path=args.out)
 
 
 if __name__ == "__main__":

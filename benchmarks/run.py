@@ -16,6 +16,7 @@ import traceback
 
 from benchmarks import paper_validation as pv
 from benchmarks.async_vs_sync import bench_async_vs_sync
+from benchmarks.fleet_scaling import bench_fleet_scaling
 from benchmarks.hetero import bench_hetero
 from benchmarks.hierarchy import bench_hierarchy
 from benchmarks.server_step import bench_server_step
@@ -97,6 +98,7 @@ BENCHES = {
     "async_vs_sync": bench_async_vs_sync,
     "hetero": bench_hetero,
     "hierarchy": bench_hierarchy,
+    "fleet_scaling": bench_fleet_scaling,
     "server_step": bench_server_step,
     "serving": bench_serving,
     # system benches

@@ -258,10 +258,21 @@ class FleetLoader:
         """Client ``k``'s next batch (the sequential engine's draw)."""
         return self._get(k).next_batch()
 
-    def next_batches(self, k_indices: Sequence[int]) -> Dict[str, np.ndarray]:
+    def next_batches(self, k_indices: Sequence[int],
+                     pad_to: Optional[int] = None) -> Dict[str, np.ndarray]:
         """Draw the next batch of every listed client, stacked ``(G, B, ...)``
-        in ``k_indices`` order.  Each client advances exactly one draw."""
+        in ``k_indices`` order.  Each client advances exactly one draw.
+
+        ``pad_to`` (>= len(k_indices)) appends repeat copies of the *first*
+        listed client's draw until the stack has that many rows — without
+        advancing any stream.  The batched fleet engine uses this to keep
+        chunk shapes stable across rounds and divisible by the mesh ``data``
+        axis (``parallel.sharding.client_chunk_pad``); the padding rows are
+        dropped from the engine's output before aggregation, so they never
+        carry weight."""
         batches = [self._get(k).next_batch() for k in k_indices]
+        if pad_to is not None and pad_to > len(batches):
+            batches = batches + [batches[0]] * (pad_to - len(batches))
         return {key: np.stack([b[key] for b in batches])
                 for key in batches[0]}
 

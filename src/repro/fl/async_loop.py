@@ -198,7 +198,7 @@ def run_federated_async(
     loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
                                       seed=fl.seed)
     engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
-                        fl.augment, fl.quantize_transfer)
+                        fl.augment, fl.quantize_transfer, mesh=mesh)
     native_op = program.native_op
     seq = (clients_data[0]["tokens"].shape[1]
            if "tokens" in clients_data[0] else None)

@@ -212,20 +212,29 @@ class ShardedFlatLayout(FlatLayout):
         # placement; unflatten gathers the buffer first so the slice-per-leaf
         # program never runs under the partitioner.
         _rep = NamedSharding(mesh, P())
+        # inputs get the same treatment: the mesh-parallel batched fleet
+        # engine hands back rows whose leaves may still carry a data-axis
+        # sharding (it gathers chunk outputs itself, but e.g. a caller
+        # passing sharded arrays directly must not re-trigger the bug), so
+        # every tree is pinned to one device before the plain flatten runs
+        _home = mesh.devices.flat[0]
         _fl, _fs = self._flatten, self._flatten_stacked
         _unfl = self._unflatten
         _stack = jax.jit(
             lambda rows: jnp.stack([self._flatten_impl(r) for r in rows]))
         _sub = jax.jit(lambda s, g: s - g[None])
-        self._flatten = lambda t: jax.device_put(_fl(t), self.vec_sharding)
+        self._flatten = lambda t: jax.device_put(
+            _fl(jax.device_put(t, _home)), self.vec_sharding)
         self._flatten_stacked = lambda t: jax.device_put(
-            _fs(t), self.rows_sharding)
+            _fs(jax.device_put(t, _home)), self.rows_sharding)
         self._unflatten = lambda buf: _unfl(jax.device_put(buf, _rep))
         self._deltas_list = lambda rows, g: _sub(
-            jax.device_put(_stack(rows), self.rows_sharding),
+            jax.device_put(_stack(jax.device_put(rows, _home)),
+                           self.rows_sharding),
             jax.device_put(g, self.vec_sharding))
         self._deltas_stacked = lambda tree, g: _sub(
-            jax.device_put(_fs(tree), self.rows_sharding),
+            jax.device_put(_fs(jax.device_put(tree, _home)),
+                           self.rows_sharding),
             jax.device_put(g, self.vec_sharding))
 
     # tail-padded variants of the bitwise flatten family: identical leaf

@@ -21,6 +21,17 @@ interchangeable engines implement it (``FLConfig.engine``):
   so the same seed yields the same history up to float32 summation order
   (drilled in tests/test_fleet.py).
 
+With ``FLConfig.mesh_shape`` set, the batched engine goes *mesh-parallel*
+(``make_sharded_fleet_step``): each chunk's client axis splits along the
+mesh ``data`` axis under an explicit ``shard_map`` — chunks pad to
+shard-divisible sizes, stacked draws land pre-placed, and every device
+trains its own slice of the clients with zero collectives.  The sharded
+per-client rows gather to one device for the row glue and re-land on the
+mesh as the ``ShardedServerStep``'s delta matrix, so one round runs local
+training, compression, aggregation and apply across all devices
+(tests/test_mesh_fleet.py pins the equivalence contract;
+benchmarks/fleet_scaling.py the 1-dev vs 8-dev round-time curve).
+
 Both engines return ``(idxs, rows)``: the trained client indices and their
 post-round parameters — a list of pytrees (sequential) or one pytree with a
 leading client axis (batched).  ``rows_as_list`` / ``take_rows`` adapt
@@ -33,7 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Dict, List, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -136,13 +147,96 @@ def make_fleet_step_masked(program: SplitProgram, quantize: bool):
     return fleet_step
 
 
+def make_sharded_fleet_step(program: SplitProgram, quantize: bool, mesh):
+    """Mesh-parallel OP-group round: the same vmap-of-scan body, wrapped in
+    an explicit ``shard_map`` that splits the stacked client axis along the
+    mesh ``data`` axis — each device trains ``G / data`` clients with the
+    plain per-device program, and because clients are independent the body
+    needs ZERO collectives (``check_rep=False``: outputs are client-sharded
+    by construction).
+
+    Explicit ``shard_map``, not GSPMD propagation, on purpose: letting the
+    partitioner chew through the vmap-of-scan training step inserts
+    pathological collectives on the CPU backend (measured ~8x *slower* than
+    single-device for the conv family), while the shard_map body compiles to
+    exactly the legacy program per shard.  For conv families this is also
+    where the mesh *wins* on CPU: XLA CPU lowers the client-batched conv
+    backward to grouped convolutions that scale superlinearly in the client
+    axis, so 8 shards of ``G=1`` beat one fused ``G=8`` even when the host
+    serializes the shards (benchmarks/fleet_scaling.py records the curve).
+
+    ``params`` (and ``lr``) use replicated in_specs: the jit wrapper gathers
+    a tp-placed global (``SplitProgram.shard_params``) once per dispatch —
+    clients all start from the same full params, so model-axis devices hold
+    replicas inside the step and the ``model`` axis keeps its PR 9 role of
+    sharding the flat server-step buffer between rounds.  ``batches`` must
+    arrive with the client axis a multiple of the ``data`` size
+    (``parallel.sharding.client_chunk_pad``) and placed by
+    ``SplitProgram.shard_batches``."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    @partial(jax.jit, static_argnames=("op",))
+    def fleet_step(params, batches, lr, op):
+        def body(params, batches, lr):
+            def one_client(p, client_batches):
+                def step(p, batch):
+                    return _sgd_update(program, quantize, p, batch, lr, op)
+                return jax.lax.scan(step, p, client_batches)
+
+            return jax.vmap(one_client, in_axes=(None, 0))(params, batches)
+
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P(), P("data"), P()),
+                         out_specs=P("data"), check_rep=False)(
+                             params, batches, lr)
+
+    return fleet_step
+
+
+def make_sharded_fleet_step_masked(program: SplitProgram, quantize: bool,
+                                   mesh):
+    """Width-masked (HeteroFL) variant of ``make_sharded_fleet_step``: the
+    group-wide mask rides along replicated like the params — every shard
+    applies the same subnetwork mask to its slice of the client axis."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    @partial(jax.jit, static_argnames=("op",))
+    def fleet_step(params, mask, batches, lr, op):
+        def body(params, mask, batches, lr):
+            def one_client(p, client_batches):
+                def step(p, batch):
+                    loss, grads = jax.value_and_grad(
+                        lambda q: program.loss_through_cut(
+                            q, batch, op, quantize=quantize))(p)
+                    new = jax.tree_util.tree_map(
+                        lambda q, g, m: q - lr * (m * g), p, grads, mask)
+                    return new, loss
+                return jax.lax.scan(step, p, client_batches)
+
+            p0 = jax.tree_util.tree_map(jnp.multiply, mask, params)
+            return jax.vmap(one_client, in_axes=(None, 0))(p0, batches)
+
+        return shard_map(body, mesh=mesh,
+                         in_specs=(P(), P(), P("data"), P()),
+                         out_specs=P("data"), check_rep=False)(
+                             params, mask, batches, lr)
+
+    return fleet_step
+
+
 class SequentialEngine:
     """One jit dispatch per (client, iteration) — the pre-fleet loop."""
 
     name = "sequential"
 
     def __init__(self, program: SplitProgram, local_iters: int, seed: int,
-                 augment: bool, quantize: bool):
+                 augment: bool, quantize: bool, mesh=None):
+        # ``mesh`` is accepted for engine-interface uniformity and ignored:
+        # the sequential oracle always runs the legacy per-client dispatches
+        # (with FLConfig.mesh_shape set it still benefits from the sharded
+        # *server* step; only the batched engine shards local training)
         self.local_iters = local_iters
         self.seed = seed
         self.augment = augment
@@ -198,18 +292,53 @@ class BatchedEngine:
     of a fused group is ~``group x (params + grads + adjoints)``, so an
     unbounded group blows past cache/HBM at large K while the dispatch
     savings have long since saturated.  The default (8) is the measured
-    sweet spot on CPU; raise it on accelerators with memory to spare."""
+    sweet spot on CPU; raise it on accelerators with memory to spare.
+
+    ``mesh`` (a ``(data, model)`` Mesh from ``parallel.sharding
+    .make_flat_mesh``, threaded from ``FLConfig.mesh_shape`` by both loops)
+    switches every chunk to the mesh-parallel ``shard_map`` fleet step: the
+    chunk size rounds up to a multiple of the ``data`` axis (short chunks
+    pad with repeated, dropped-after-the-step rows — ``client_chunk_pad``),
+    stacked draws are placed shard-wise (``SplitProgram.shard_batches``)
+    before dispatch, and each device trains ``chunk / data`` clients.
+    Chunk outputs are gathered back to the mesh's first device before the
+    row glue (slice/concat/take_rows): eager per-leaf ops on data-sharded
+    arrays thrash the CPU backend's collective rendezvous, and the flat
+    layout re-places the delta matrix on the mesh for the sharded server
+    step anyway (``ShardedFlatLayout.rows_to_deltas``) — same
+    compute-sharded / glue-pinned compromise PR 9 pinned for the layout.
+    ``mesh=None`` is the exact legacy single-device engine, bitwise
+    (tests/test_mesh_fleet.py)."""
 
     name = "batched"
 
     def __init__(self, program: SplitProgram, local_iters: int, seed: int,
-                 augment: bool, quantize: bool, max_group: int = 8):
+                 augment: bool, quantize: bool, max_group: int = 8,
+                 mesh=None):
+        self.program = program
         self.local_iters = local_iters
         self.seed = seed
         self.augment = augment
         self.max_group = max(1, int(max_group))
-        self._step = make_fleet_step(program, quantize)
-        self._step_masked = make_fleet_step_masked(program, quantize)
+        self.mesh = mesh
+        if mesh is not None:
+            if "data" not in mesh.shape:
+                raise ValueError(f"mesh axes {tuple(mesh.shape)} must "
+                                 f"include 'data' (make_flat_mesh)")
+            self.data_size = int(mesh.shape["data"])
+            # smallest multiple of the data axis >= max_group, so every
+            # full chunk splits evenly across the data-axis devices
+            self.chunk = -(-self.max_group // self.data_size) \
+                * self.data_size
+            self._step = make_sharded_fleet_step(program, quantize, mesh)
+            self._step_masked = make_sharded_fleet_step_masked(
+                program, quantize, mesh)
+            self._home = mesh.devices.flat[0]
+        else:
+            self.data_size = 1
+            self.chunk = self.max_group
+            self._step = make_fleet_step(program, quantize)
+            self._step_masked = make_fleet_step_masked(program, quantize)
 
     def _group(self, ops: Sequence[int], alive_idx: Sequence[int],
                hetero=None) -> Dict[tuple, List[int]]:
@@ -223,44 +352,61 @@ class BatchedEngine:
         return groups
 
     def _stack_round(self, loader: FleetLoader, ks: List[int],
-                     round_idx: int) -> Dict[str, jnp.ndarray]:
+                     round_idx: int, pad_to: Optional[int] = None
+                     ) -> Dict[str, jnp.ndarray]:
         """Materialize the group's whole round of data host-side: for each
         local iteration draw every client's next batch (the same per-client
         streams the sequential engine consumes), augment, and stack to
-        ``(G, I, B, ...)``."""
+        ``(G, I, B, ...)``.  ``pad_to > len(ks)`` repeats the first client's
+        (augmented) rows up to that chunk size — stable compiled shapes and
+        shard-divisible client axes — without advancing any stream; on a
+        mesh the stack lands shard-wise placed (clients along ``data``)."""
+        C = max(len(ks), int(pad_to or 0))
         per_iter: List[Dict[str, np.ndarray]] = []
         for it in range(self.local_iters):
-            nb = loader.next_batches(ks)                     # (G, B, ...)
+            nb = loader.next_batches(ks, pad_to=C)           # (C, B, ...)
             if self.augment and "images" in nb:
-                nb["images"] = np.stack(
+                imgs = np.stack(
                     [flip_augment(nb["images"][i], self.seed, round_idx, k,
                                   it)
                      for i, k in enumerate(ks)])
+                if C > len(ks):        # padding rows repeat augmented row 0
+                    imgs = np.concatenate(
+                        [imgs, np.repeat(imgs[:1], C - len(ks), axis=0)])
+                nb["images"] = imgs
             per_iter.append(nb)
-        return {key: jnp.asarray(np.stack([pb[key] for pb in per_iter],
-                                          axis=1))
-                for key in per_iter[0]}
+        batches = {key: jnp.asarray(np.stack([pb[key] for pb in per_iter],
+                                             axis=1))
+                   for key in per_iter[0]}
+        if self.mesh is not None:
+            batches = self.program.shard_batches(batches, self.mesh)
+        return batches
 
     def run_round(self, params: Params, loader: FleetLoader,
                   ops: Sequence[int], alive_idx: Sequence[int],
                   round_idx: int, lr: float, hetero=None
                   ) -> Tuple[List[int], StackedRows]:
+        from repro.parallel.sharding import client_chunk_pad
         idxs: List[int] = []
         stacked: List[Params] = []
         for (op, _w), all_ks in self._group(ops, alive_idx, hetero).items():
-            for i in range(0, len(all_ks), self.max_group):
-                ks = all_ks[i:i + self.max_group]
-                batches = self._stack_round(loader, ks, round_idx)
-                # pad a short tail chunk of a multi-chunk group up to
-                # max_group (repeating data rows, never drawing extra
+            for i in range(0, len(all_ks), self.chunk):
+                ks = all_ks[i:i + self.chunk]
+                # pad a short tail chunk of a multi-chunk group up to the
+                # full chunk size (repeating data rows, never drawing extra
                 # batches) so chunk sizes — and therefore compiled (G, ...)
-                # shapes — don't vary with K % max_group or failure counts
-                pad = self.max_group - len(ks) if len(all_ks) > len(ks) else 0
-                if pad:
-                    sel = jnp.asarray(
-                        np.concatenate([np.arange(len(ks)),
-                                        np.zeros(pad, np.int32)]))
-                    batches = {key: v[sel] for key, v in batches.items()}
+                # shapes — don't vary with K % chunk or failure counts; a
+                # single-chunk group pads only to the next multiple of the
+                # mesh data axis (0 rows on a single device), so per-round
+                # membership changes never force a replicate fallback or a
+                # recompile on the client axis
+                if len(all_ks) > len(ks):
+                    pad_to = self.chunk
+                else:
+                    pad_to = len(ks) + client_chunk_pad(len(ks),
+                                                        self.data_size)
+                batches = self._stack_round(loader, ks, round_idx,
+                                            pad_to=pad_to)
                 if hetero is not None:
                     finals, _ = self._step_masked(
                         params, hetero.mask_tree(ks[0]), batches,
@@ -268,7 +414,14 @@ class BatchedEngine:
                 else:
                     finals, _ = self._step(params, batches, jnp.float32(lr),
                                            op)
-                if pad:
+                if self.mesh is not None:
+                    # one gather per chunk off the data axis (pure data
+                    # movement, bitwise): the row glue below and the flat
+                    # layout's flatten stay on the documented single-device
+                    # path, and rows_to_deltas re-places the delta matrix
+                    # on the mesh for the sharded server step
+                    finals = jax.device_put(finals, self._home)
+                if pad_to > len(ks):
                     finals = jax.tree_util.tree_map(lambda a: a[:len(ks)],
                                                     finals)
                 idxs.extend(ks)
@@ -284,13 +437,18 @@ ENGINES = {"sequential": SequentialEngine, "batched": BatchedEngine}
 
 
 def get_engine(name: str, program: SplitProgram, local_iters: int, seed: int,
-               augment: bool, quantize: bool):
+               augment: bool, quantize: bool, mesh=None):
+    """Build the configured fleet engine.  ``mesh`` (from
+    ``FLConfig.mesh_shape`` via the loops' ``_resolve_mesh``) turns the
+    batched engine mesh-parallel; the sequential engine accepts and ignores
+    it (it stays the single-device oracle the mesh path is tested
+    against)."""
     try:
         cls = ENGINES[name]
     except KeyError:
         raise ValueError(f"unknown fleet engine {name!r}; "
                          f"known: {sorted(ENGINES)}") from None
-    return cls(program, local_iters, seed, augment, quantize)
+    return cls(program, local_iters, seed, augment, quantize, mesh=mesh)
 
 
 # -----------------------------------------------------------------------------

@@ -149,11 +149,19 @@ class FLConfig:
                                      # client rows along 'data', and params
                                      # are placed via param_pspecs so split
                                      # rounds run mesh-sharded end to end.
+                                     # With engine="batched" local training
+                                     # itself goes mesh-parallel: each OP-
+                                     # group chunk's client axis splits
+                                     # along 'data' under a shard_map fleet
+                                     # step (fl/fleet.py); "sequential"
+                                     # keeps single-device local training
+                                     # and shards only the server step.
                                      # Requires server_step="fused" and
                                      # data*model visible devices.  None =
                                      # the exact legacy single-device path,
                                      # bitwise (asserted in
-                                     # tests/test_sharded_flatbuf.py)
+                                     # tests/test_sharded_flatbuf.py and
+                                     # tests/test_mesh_fleet.py)
     seed: int = 0
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
@@ -344,7 +352,7 @@ def run_federated(
     loaders = FleetLoader.for_clients(clients_data, fl.batch_size,
                                       seed=fl.seed)
     engine = get_engine(fl.engine, program, fl.local_iters, fl.seed,
-                        fl.augment, fl.quantize_transfer)
+                        fl.augment, fl.quantize_transfer, mesh=mesh)
     injector = FailureInjector(fl.fail_prob, seed=fl.seed)
     native_op = program.native_op
     seq = (clients_data[0]["tokens"].shape[1]

@@ -109,6 +109,19 @@ class SplitProgram:
         specs = param_pspecs(params, rules)
         return jax.device_put(params, named_shardings(specs, mesh))
 
+    def shard_batches(self, batches, mesh):
+        """Place a stacked client-batch pytree (leaves ``(G, ...)`` with a
+        leading client axis) shard-wise on ``mesh``: clients along ``data``,
+        everything else replicated (``parallel.sharding
+        .client_rows_sharding``).  The batched fleet engine calls this on
+        each OP-group chunk before its sharded fleet step so the stacked
+        draws land pre-split — one host->mesh transfer per chunk, no
+        resharding inside the compiled step.  The chunk's client count must
+        already be a multiple of the mesh ``data`` size
+        (``client_chunk_pad``)."""
+        from repro.parallel.sharding import client_rows_sharding
+        return jax.device_put(batches, client_rows_sharding(mesh))
+
     def client_forward(self, params: Params, batch: Dict, op: int):
         """Device stage: inputs -> cut payload (a pytree of arrays)."""
         raise NotImplementedError

@@ -114,6 +114,30 @@ def flat_shard_tail(padded: int, block: int, model_size: int) -> int:
     return (-padded) % (block * int(model_size))
 
 
+def client_chunk_pad(n_clients: int, data_size: int) -> int:
+    """Rows to append so a stacked client chunk splits evenly along the
+    mesh ``data`` axis.
+
+    The client-axis analogue of ``flat_shard_tail``: ``shard_map`` requires
+    the mapped axis to divide the axis size exactly, and the ``AxisRules``
+    replicate-on-indivisible fallback would put the whole chunk on every
+    data-axis device — so the batched fleet engine instead pads each chunk
+    with repeated (zero-weight, dropped-after-the-step) rows up to the next
+    multiple.  ``data_size=1`` always returns 0, keeping the legacy
+    single-device chunking untouched."""
+    if data_size < 1:
+        raise ValueError(f"data_size={data_size} must be >= 1")
+    return (-int(n_clients)) % int(data_size)
+
+
+def client_rows_sharding(mesh: Mesh) -> NamedSharding:
+    """Placement for a stacked per-client pytree: the leading axis of every
+    leaf (clients) along ``data``, all trailing dims replicated.  Used for
+    the batched fleet engine's ``(G, I, B, ...)`` batch stacks and the
+    ``(G, ...)`` per-client outputs of the sharded fleet step."""
+    return NamedSharding(mesh, P("data"))
+
+
 def make_axis_rules(mesh: Mesh, *, fsdp: bool = True, tp: bool = True,
                     seq_shard: bool = False,
                     extra: Optional[Dict[str, Tuple[str, ...]]] = None) -> AxisRules:

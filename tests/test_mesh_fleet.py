@@ -1,0 +1,233 @@
+"""Mesh-parallel batched fleet engine (fl/fleet.py shard_map fleet step
+over parallel.sharding.make_flat_mesh).
+
+Contracts under test (ISSUE 10):
+
+* ``mesh_shape=None`` is the exact legacy engine — and a
+  ``mesh_shape=(1, 1)`` batched run is bitwise identical to a ``None``
+  run (the shard_map over a size-1 data axis compiles to the same
+  per-chunk program).
+* mesh-parallel batched == single-device batched oracle: bitwise at
+  data=1 meshes (model-only sharding never re-tiles the client axis),
+  fp32 tolerance (``atol=1e-6``) for data>1 — the per-shard client-axis
+  extent changes XLA CPU's grouped-conv tiling by the last ulp (same
+  contract family as the sharded server step, docs/API.md).
+* mesh-aware chunk padding: every OP-group chunk is padded to a multiple
+  of the mesh data-axis size with repeats of the group's first client
+  draw (``FleetLoader.next_batches(pad_to=)`` — no stream advance), so
+  per-chunk shapes are shard-divisible and stable across rounds: no
+  per-round recompiles, no replicate fallback.  Dead/failed clients and
+  hetero width-masked groups ride the same path.
+* sharded-engine checkpoint resume is bitwise, including K not
+  divisible by the data-axis size.
+
+Multi-device cases run in subprocesses with
+``--xla_force_host_platform_device_count=8`` (tests themselves must see
+one CPU device, per the conftest isolation rule); the CI lane
+``test-multidevice`` sets the same flag process-wide.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.vgg import VGG5
+from repro.data.loader import FleetLoader
+from repro.data.synthetic import make_cifar_like, split_clients
+from repro.fl.fleet import BatchedEngine, get_engine
+from repro.fl.loop import FLConfig, run_federated
+from repro.models.split_program import get_split_program
+from repro.parallel.sharding import client_chunk_pad
+
+
+def _run_subprocess(script: str, timeout: int = 600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(script)],
+                         env=env, capture_output=True, text=True,
+                         timeout=timeout)
+    assert out.returncode == 0, (out.stdout[-2000:] + out.stderr[-4000:])
+    return out.stdout
+
+
+# ---------------------------------------------------------------------------
+# unit: chunk padding math + loader pad draws (no mesh needed)
+# ---------------------------------------------------------------------------
+def test_client_chunk_pad_math():
+    assert client_chunk_pad(5, 1) == 0          # data=1: never pads
+    assert client_chunk_pad(5, 2) == 1
+    assert client_chunk_pad(8, 2) == 0
+    assert client_chunk_pad(1, 8) == 7
+    assert client_chunk_pad(0, 4) == 0
+    with pytest.raises(ValueError):
+        client_chunk_pad(5, 0)
+
+
+def test_batched_engine_without_mesh_keeps_legacy_chunk():
+    program = get_split_program(VGG5)
+    eng = get_engine("batched", program, 2, seed=0, augment=False,
+                     quantize=False, mesh=None)
+    assert isinstance(eng, BatchedEngine)
+    assert eng.mesh is None
+    assert eng.data_size == 1
+    assert eng.chunk == eng.max_group
+
+
+def test_loader_pad_to_repeats_first_draw_without_advancing():
+    clients = split_clients(make_cifar_like(40, seed=0), 4)
+    a = FleetLoader.for_clients(clients, 5, seed=0)
+    b = FleetLoader.for_clients(clients, 5, seed=0)
+    padded = a.next_batches([1, 2], pad_to=4)
+    plain = b.next_batches([1, 2])
+    for key in padded:
+        assert padded[key].shape[0] == 4 and plain[key].shape[0] == 2
+        # pad rows repeat the group's first draw byte-for-byte
+        np.testing.assert_array_equal(padded[key][2], padded[key][0])
+        np.testing.assert_array_equal(padded[key][3], padded[key][0])
+        np.testing.assert_array_equal(padded[key][:2], plain[key])
+    # padding must not advance any client's stream
+    nxt_a, nxt_b = a.next_batches([1, 2]), b.next_batches([1, 2])
+    for key in nxt_a:
+        np.testing.assert_array_equal(nxt_a[key], nxt_b[key])
+
+
+def test_loader_pad_to_noop_when_already_large_enough():
+    clients = split_clients(make_cifar_like(40, seed=0), 4)
+    a = FleetLoader.for_clients(clients, 5, seed=0)
+    out = a.next_batches([0, 1, 2], pad_to=2)
+    assert all(v.shape[0] == 3 for v in out.values())
+
+
+# ---------------------------------------------------------------------------
+# in-process: mesh_shape=(1,1) is bitwise the mesh_shape=None engine
+# ---------------------------------------------------------------------------
+def test_mesh_1x1_batched_bitwise_vs_none():
+    data = make_cifar_like(64, seed=0)
+    clients = split_clients(data, 5)
+    test = {k: v[:16] for k, v in data.items()}
+    base = dict(rounds=2, local_iters=2, batch_size=4, lr=0.05, mode="sfl",
+                static_op=2, engine="batched", server_step="fused",
+                augment=True, delta_density=0.5, seed=0)
+    h_none = run_federated(VGG5, clients, test, FLConfig(**base))
+    h_mesh = run_federated(VGG5, clients, test,
+                           FLConfig(**base, mesh_shape=(1, 1)))
+    np.testing.assert_array_equal(h_none["accuracy"], h_mesh["accuracy"])
+    for a, b in zip(jax.tree_util.tree_leaves(h_none["params"]),
+                    jax.tree_util.tree_leaves(h_mesh["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# subprocess battery: 8 forced host devices
+# ---------------------------------------------------------------------------
+def test_mesh_fleet_equivalence_battery():
+    """data-only (8,1), model-only (1,8) and mixed (2,4) meshes against
+    the no-mesh batched oracle — under client failures (pad/dead-row
+    round) and a hetero width-masked group.  (1,8) must be bitwise
+    (data=1); data>1 shapes hold at fp32 tolerance."""
+    out = _run_subprocess("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.configs.vgg import VGG5
+        from repro.data.synthetic import make_cifar_like, split_clients
+        from repro.fl.loop import FLConfig, run_federated
+
+        data = make_cifar_like(64, seed=0)
+        clients = split_clients(data, 5)          # K=5: no shape divides it
+        test = {k: v[:16] for k, v in data.items()}
+        base = dict(rounds=2, local_iters=2, batch_size=4, lr=0.05,
+                    mode="sfl", static_op=2, engine="batched",
+                    server_step="fused", augment=True, delta_density=0.5,
+                    fail_prob=0.3, seed=0)
+        oracle = run_federated(VGG5, clients, test, FLConfig(**base))
+        po = [np.asarray(l) for l in
+              jax.tree_util.tree_leaves(oracle["params"])]
+        for shape, want_bitwise in [((8, 1), False), ((1, 8), True),
+                                    ((2, 4), False)]:
+            h = run_federated(VGG5, clients, test,
+                              FLConfig(**base, mesh_shape=shape))
+            pm = [np.asarray(l) for l in
+                  jax.tree_util.tree_leaves(h["params"])]
+            assert all(np.allclose(a, b, atol=1e-6)
+                       for a, b in zip(po, pm)), f"allclose broke {shape}"
+            if want_bitwise:
+                assert all((a == b).all() for a, b in zip(po, pm)), \\
+                    f"data=1 mesh {shape} must be bitwise"
+            assert np.array_equal(h["dropped"], oracle["dropped"])
+            print(f"OK {shape}")
+        # hetero width-masked group through the masked shard_map step
+        hb = dict(base, client_widths=[1.0, 0.5, 1.0, 0.5, 1.0],
+                  fail_prob=0.0)
+        ho = run_federated(VGG5, clients, test, FLConfig(**hb))
+        hm = run_federated(VGG5, clients, test,
+                           FLConfig(**hb, mesh_shape=(2, 1)))
+        pho = [np.asarray(l) for l in
+               jax.tree_util.tree_leaves(ho["params"])]
+        phm = [np.asarray(l) for l in
+               jax.tree_util.tree_leaves(hm["params"])]
+        assert all(np.allclose(a, b, atol=1e-6)
+                   for a, b in zip(pho, phm)), "hetero (2,1) allclose broke"
+        print("OK hetero")
+    """)
+    assert "OK (8, 1)" in out and "OK (1, 8)" in out and "OK (2, 4)" in out
+    assert "OK hetero" in out
+
+
+def test_mesh_fleet_resume_bitwise_and_async():
+    """Checkpoint resume with the mesh-parallel engine is bitwise at
+    (2, 1) with K=5 (not divisible by data), and the async loop threads
+    the same mesh through its engine at fp32 tolerance."""
+    out = _run_subprocess("""
+        import os, tempfile
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, numpy as np
+        from repro.configs.vgg import VGG5
+        from repro.data.synthetic import make_cifar_like, split_clients
+        from repro.fl.loop import FLConfig, run_federated
+        from repro.fl.async_loop import run_federated_async
+
+        data = make_cifar_like(64, seed=0)
+        clients = split_clients(data, 5)
+        test = {k: v[:16] for k, v in data.items()}
+
+        def cfg(d, rounds):
+            return FLConfig(rounds=rounds, local_iters=2, batch_size=4,
+                            lr=0.05, mode="sfl", static_op=2,
+                            engine="batched", server_step="fused",
+                            delta_density=0.5, seed=0, mesh_shape=(2, 1),
+                            checkpoint_dir=d, checkpoint_every=2)
+        with tempfile.TemporaryDirectory() as d1, \\
+                tempfile.TemporaryDirectory() as d2:
+            full = run_federated(VGG5, clients, test, cfg(d1, 4))
+            run_federated(VGG5, clients, test, cfg(d2, 2))  # stop at 2
+            res = run_federated(VGG5, clients, test, cfg(d2, 4),
+                                resume=True)
+        pf = [np.asarray(l) for l in
+              jax.tree_util.tree_leaves(full["params"])]
+        pr = [np.asarray(l) for l in
+              jax.tree_util.tree_leaves(res["params"])]
+        assert all((a == b).all() for a, b in zip(pf, pr)), \\
+            "sharded-engine resume not bitwise"
+        print("OK resume")
+
+        a_base = dict(rounds=3, local_iters=2, batch_size=4, lr=0.05,
+                      mode="sfl", static_op=2, engine="batched",
+                      server_step="fused", buffer_size=2,
+                      staleness_discount=0.5, seed=0)
+        a0 = run_federated_async(VGG5, clients, test, FLConfig(**a_base))
+        a1 = run_federated_async(VGG5, clients, test,
+                                 FLConfig(**a_base, mesh_shape=(2, 1)))
+        pa0 = [np.asarray(l) for l in
+               jax.tree_util.tree_leaves(a0["params"])]
+        pa1 = [np.asarray(l) for l in
+               jax.tree_util.tree_leaves(a1["params"])]
+        assert all(np.allclose(a, b, atol=1e-6)
+                   for a, b in zip(pa0, pa1)), "async (2,1) allclose broke"
+        print("OK async")
+    """)
+    assert "OK resume" in out and "OK async" in out

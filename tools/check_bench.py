@@ -62,6 +62,15 @@ SCHEMA: Dict[str, List[str]] = {
         "width_sweep[].fleet", "width_sweep[].final_acc",
         "churn_time_to_target.clean.virtual_time",
     ],
+    "fleet_scaling": [
+        "backend", "mesh_devices", "local_iters",
+        "results[].model", "results[].K", "results[].engine",
+        "results[].s_per_round", "results[].rounds_per_s",
+        "mesh[].model", "mesh[].K", "mesh[].devices",
+        "mesh[].s_per_round_1dev", "mesh[].s_per_round_mesh",
+        "mesh[].speedup_mesh", "mesh[].mesh_bitwise",
+        "mesh[].mesh_allclose",
+    ],
 }
 
 # required only in the committed full-sweep artifact: smoke grids are too
@@ -72,6 +81,10 @@ SCHEMA_COMMITTED_ONLY: Dict[str, List[str]] = {
     "hierarchy": [],
     "serving": [],
     "hetero": ["churn_time_to_target.churn.virtual_time"],
+    # the ISSUE-10 acceptance cell only exists on the full sweep (smoke has
+    # no K >= 64 rows to pick a best from)
+    "fleet_scaling": ["acceptance.mesh_beats_1dev_at_K64",
+                      "acceptance.best.speedup_mesh"],
 }
 
 # correctness booleans that must be truthy wherever present.
@@ -83,6 +96,13 @@ EQUIVALENCE: Dict[str, List[str]] = {
     "hierarchy": ["equivalence.bitwise"],
     "serving": [],
     "hetero": [],
+    # fleet_scaling: mesh_allclose must hold for every mesh cell (bitwise is
+    # only promised at data=1 meshes — docs/API.md).  The acceptance flag
+    # (an 8-dev mesh beats 1-dev batched on some K >= 64 cell) only exists
+    # in the committed artifact; the KeyError fallthrough below makes it a
+    # committed-only equivalence gate.
+    "fleet_scaling": ["mesh[].mesh_allclose",
+                      "acceptance.mesh_beats_1dev_at_K64"],
 }
 
 # representative throughput field per bench, as (value_path, scale_path):
@@ -94,6 +114,8 @@ THROUGHPUT: Dict[str, tuple] = {
     "hierarchy": ("edge_scaling[0].agg_ms", "edge_scaling[0].cohort_rows"),
     "serving": ("calibration.saturated_tokens_per_s", None),
     "hetero": ("churn_time_to_target.clean.virtual_time", None),
+    # results[0] is the vgg K=4 sequential cell in both grids (same size)
+    "fleet_scaling": ("results[0].s_per_round", None),
 }
 
 
